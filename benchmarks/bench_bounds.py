@@ -1,0 +1,69 @@
+"""Theorem-slack benchmark: Thm. 4 / Prop. 5 / Prop. 6 / Thm. 7.
+
+For each bound we report measured / bound (<= 1 required) so the table
+doubles as a tightness study.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import criterion, simulation
+from repro.core.accounting import ByteModel
+from repro.core.learners import LearnerConfig
+from repro.core.protocol import ProtocolConfig
+from repro.core.rkhs import KernelSpec
+from repro.data import susy_stream
+
+from .common import Row
+
+T, M, D = 600, 4, 8
+
+
+def run(quick: bool = False):
+    t = 150 if quick else T
+    X, Y = susy_stream(T=t, m=M, d=D, seed=0)
+    delta = 2.0
+    lcfg = LearnerConfig(algo="kernel_sgd", loss="hinge", eta=0.5, lam=0.01,
+                         budget=64, kernel=KernelSpec("gaussian", gamma=0.3),
+                         dim=D)
+
+    t0 = time.perf_counter()
+    res_d = simulation.run_kernel_simulation(
+        lcfg, ProtocolConfig(kind="dynamic", delta=delta), X, Y)
+    res_c = simulation.run_kernel_simulation(
+        lcfg, ProtocolConfig(kind="continuous"), X, Y)
+    wall = (time.perf_counter() - t0) * 1e6 / (2 * t)
+
+    gamma = lcfg.eta
+    eps = float(res_d.eps_history.max()) if len(res_d.eps_history) else 0.0
+    bm = ByteModel(dim=D)
+    union = t * M
+
+    thm4_bound = res_c.total_loss + t * (delta + 2 * eps ** 2) / gamma ** 2
+    prop6_bound = (lcfg.eta / np.sqrt(delta)) * res_d.total_loss
+    prop5_bound = 2 * t * M * union * bm.B_alpha + M * union * bm.B_x
+    thm7_bound = (prop6_bound * 2 * M * union * bm.B_alpha
+                  + M * union * bm.B_x)
+
+    rows = [
+        Row("bounds/thm4_loss", wall,
+            f"measured={res_d.total_loss:.1f};bound={thm4_bound:.1f};"
+            f"ratio={res_d.total_loss / thm4_bound:.3f};ok={res_d.total_loss <= thm4_bound}"),
+        Row("bounds/prop6_syncs", 0.0,
+            f"measured={res_d.num_syncs};bound={prop6_bound:.1f};"
+            f"ratio={res_d.num_syncs / prop6_bound:.3f};ok={res_d.num_syncs <= prop6_bound}"),
+        Row("bounds/prop5_comm_continuous", 0.0,
+            f"measured={res_c.total_bytes};bound={int(prop5_bound)};"
+            f"ratio={res_c.total_bytes / prop5_bound:.4f};ok={res_c.total_bytes <= prop5_bound}"),
+        Row("bounds/thm7_comm_dynamic", 0.0,
+            f"measured={res_d.total_bytes};bound={int(thm7_bound)};"
+            f"ratio={res_d.total_bytes / thm7_bound:.5f};ok={res_d.total_bytes <= thm7_bound}"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run())

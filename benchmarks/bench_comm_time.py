@@ -1,0 +1,64 @@
+"""Fig. 1(b): cumulative communication over time + quiescence.
+
+On a stream the hypothesis class can fit (separable for linear,
+RKHS-representable for kernel), the dynamic protocol's cumulative
+communication must flatten (quiescence), while periodic/continuous
+grow linearly forever.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import simulation
+from repro.core.learners import LearnerConfig
+from repro.core.protocol import ProtocolConfig
+from repro.data import separable_stream
+
+from .common import Row
+
+T, M, D = 1000, 4, 8
+
+
+def run(quick: bool = False):
+    t = 300 if quick else T
+    X, Y = separable_stream(T=t, m=M, d=D, seed=0, margin=1.0)
+    lin = LearnerConfig(algo="linear_pa", loss="hinge", C=1.0, dim=D)
+
+    rows = []
+    curves = {}
+    for name, pcfg in [
+        ("continuous", ProtocolConfig(kind="continuous")),
+        ("periodic_b10", ProtocolConfig(kind="periodic", period=10)),
+        ("dynamic", ProtocolConfig(kind="dynamic", delta=1.0)),
+    ]:
+        t0 = time.perf_counter()
+        res = simulation.run_linear_simulation(lin, pcfg, X, Y)
+        wall = (time.perf_counter() - t0) * 1e6 / t
+        curves[name] = res
+        # communication in the last quarter of the run
+        last_q = res.cumulative_bytes[-1] - res.cumulative_bytes[3 * t // 4]
+        rows.append(Row(
+            f"comm_time/{name}", wall,
+            f"total_bytes={res.total_bytes};last_quarter_bytes={int(last_q)};"
+            f"quiescence_round={res.quiescence_round}"))
+
+    dyn = curves["dynamic"]
+    per = curves["periodic_b10"]
+    claims = {
+        "dynamic_quiescent": (dyn.cumulative_bytes[-1]
+                              == dyn.cumulative_bytes[3 * t // 4]),
+        "periodic_never_stops": (per.cumulative_bytes[-1]
+                                 > per.cumulative_bytes[3 * t // 4]),
+        "dynamic_least_comm": dyn.total_bytes
+            == min(c.total_bytes for c in curves.values()),
+    }
+    rows.append(Row("comm_time/claims", 0.0,
+                    ";".join(f"{k}={v}" for k, v in claims.items())))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run())

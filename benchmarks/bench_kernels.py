@@ -1,0 +1,59 @@
+"""Microbenchmarks of the Pallas compute kernels vs their jnp oracles
+(CPU interpret mode here; the derived column reports the TPU-relevant
+HBM-traffic saving of the fused quadform path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import Row, timeit
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    M = 256 if quick else 512
+    d = 64
+    X = jnp.asarray(rng.normal(size=(M, d)), jnp.float32)
+    Y = jnp.asarray(rng.normal(size=(M, d)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(M,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(M,)), jnp.float32)
+
+    rows = []
+    g_ref = jax.jit(lambda X, Y: ref.gram_ref(X, Y, gamma=0.5))
+    us = timeit(lambda: jax.block_until_ready(g_ref(X, Y)))
+    rows.append(Row("kernels/gram_jnp_oracle", us, f"M={M};d={d}"))
+    us = timeit(lambda: jax.block_until_ready(
+        ops.gram(X, Y, gamma=0.5, force_pallas=True)))
+    rows.append(Row("kernels/gram_pallas_interpret", us,
+                    "validated=allclose;mode=interpret(CPU)"))
+
+    q_ref = jax.jit(lambda X, Y, a, b: ref.quadform_ref(X, Y, a, b, gamma=0.5))
+    us = timeit(lambda: jax.block_until_ready(q_ref(X, Y, a, b)))
+    hbm_naive = M * M * 4
+    hbm_fused = 2 * M * d * 4
+    rows.append(Row("kernels/quadform_jnp_oracle", us,
+                    f"hbm_gram_bytes={hbm_naive}"))
+    us = timeit(lambda: jax.block_until_ready(
+        ops.quadform(X, Y, a, b, gamma=0.5, force_pallas=True)))
+    rows.append(Row("kernels/quadform_pallas_interpret", us,
+                    f"hbm_stream_bytes={hbm_fused};"
+                    f"traffic_saving={hbm_naive / hbm_fused:.0f}x"))
+
+    W = jnp.asarray(rng.normal(size=(M, d)), jnp.float32)
+    bias = jnp.asarray(rng.uniform(size=(M,)) * 6.28, jnp.float32)
+    r_ref = jax.jit(lambda X: ref.rff_ref(X, W, bias))
+    us = timeit(lambda: jax.block_until_ready(r_ref(X)))
+    rows.append(Row("kernels/rff_jnp_oracle", us, f"D={M}"))
+    us = timeit(lambda: jax.block_until_ready(
+        ops.rff_features(X, W, bias, force_pallas=True)))
+    rows.append(Row("kernels/rff_pallas_interpret", us,
+                    "fused=proj+bias+cos"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run())

@@ -1,0 +1,88 @@
+"""The paper's technique at LM scale, MEASURED (not just compiled).
+
+Four learners train the same (smoke-scale) transformer on a learnable
+synthetic copy-structure token stream under each protocol.  Claims:
+
+  (1) isolated learners (none) end with the worst loss;
+  (2) the dynamic protocol tracks the continuous protocol's loss;
+  (3) while synchronizing in far fewer rounds (=> proportionally fewer
+      parameter all-reduces at production scale).
+
+This is the framework-scale counterpart of Fig. 1: the hypothesis class
+changed from RKHS expansions to a transformer, the coordinator to an
+all-reduce — the protocol and its trade-off are unchanged.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.core.protocol import ProtocolConfig
+from repro.launch.train import init_train_state, make_train_step
+from repro.optim import OptimizerConfig
+
+from .common import Row
+
+STEPS, M, B, S = 150, 4, 4, 32
+
+
+def _stream(cfg, steps, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        toks = rng.integers(0, cfg.vocab, (M, B, S + 1))
+        half = S // 2
+        toks[..., half + 1: 2 * half + 1] = toks[..., 1: half + 1]
+        yield {"tokens": jnp.asarray(toks[..., :-1], jnp.int32),
+               "labels": jnp.asarray(toks[..., 1:], jnp.int32)}
+
+
+def run(quick: bool = False):
+    steps = 40 if quick else STEPS
+    cfg = get("qwen2_5_3b").smoke()
+    opt_cfg = OptimizerConfig(kind="adamw", lr=3e-3)
+
+    rows, results = [], {}
+    for name, pcfg in [
+        ("none", ProtocolConfig(kind="none")),
+        ("continuous", ProtocolConfig(kind="continuous")),
+        ("periodic_b10", ProtocolConfig(kind="periodic", period=10)),
+        ("dynamic", ProtocolConfig(kind="dynamic", delta=4.0)),
+        ("dynamic_adaptive", ProtocolConfig(
+            kind="dynamic", delta=1.0, delta_schedule="adaptive",
+            target_sync_rate=0.15, adapt_up=2.0)),
+    ]:
+        state = init_train_state(jax.random.PRNGKey(0), cfg, M, opt_cfg)
+        step_fn = jax.jit(make_train_step(cfg, pcfg, opt_cfg))
+        t0 = time.perf_counter()
+        last = []
+        for batch in _stream(cfg, steps):
+            state, loss = step_fn(state, batch)
+            last.append(float(loss))
+        wall = (time.perf_counter() - t0) * 1e6 / steps
+        final = float(np.mean(last[-10:]))
+        results[name] = (final, int(state.pstate.syncs))
+        rows.append(Row(
+            f"lm_protocol/{name}", wall,
+            f"final_loss={final:.4f};syncs={int(state.pstate.syncs)};"
+            f"sync_rate={int(state.pstate.syncs)/steps:.2f}"))
+
+    none_l = results["none"][0]
+    cont_l = results["continuous"][0]
+    dyn_l, dyn_s = results["dynamic"]
+    claims = {
+        "isolated_worst": none_l >= max(cont_l, dyn_l) - 1e-3,
+        "dynamic_tracks_continuous": dyn_l <= cont_l * 1.10 + 0.05,
+        "dynamic_fewer_syncs": dyn_s < steps,
+    }
+    rows.append(Row("lm_protocol/claims", 0.0,
+                    ";".join(f"{k}={v}" for k, v in claims.items())))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run())

@@ -1,0 +1,37 @@
+"""Roofline summary rows from the dry-run artifacts (§Roofline).
+
+Requires experiments/dryrun/*.json (produced by repro.launch.dryrun).
+Degrades gracefully to a notice row when the dry-run has not been run
+in this checkout.
+"""
+from __future__ import annotations
+
+import os
+
+from .common import Row
+
+
+def run(quick: bool = False):
+    try:
+        from repro.launch.roofline import analyze_record, load_records
+    except Exception as e:                      # pragma: no cover
+        return [Row("roofline/unavailable", 0.0, repr(e))]
+    recs = load_records("experiments/dryrun")
+    if not recs:
+        return [Row("roofline/no_dryrun_artifacts", 0.0,
+                    "run: python -m repro.launch.dryrun --all")]
+    rows = []
+    for r in recs:
+        a = analyze_record(r)
+        rows.append(Row(
+            f"roofline/{a['arch']}/{a['shape']}/{a['mesh']}",
+            (a["compile_s"] or 0) * 1e6,
+            f"compute_s={a['compute_s']:.3e};memory_s={a['memory_s']:.3e};"
+            f"collective_s={a['collective_s']:.3e};dominant={a['dominant']};"
+            f"useful={a['useful_ratio']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run())

@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  python -m benchmarks.run [--quick] [--only NAME]
+
+Output: ``name,us_per_call,derived`` CSV rows (plus a summary).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (bench_adaptive, bench_bounds, bench_comm_time,
+               bench_compression, bench_kernels, bench_lm_protocol,
+               bench_rff, bench_roofline, bench_stock, bench_tradeoff)
+from .common import print_rows
+
+SUITES = {
+    "tradeoff": bench_tradeoff,        # Fig. 1(a)
+    "comm_time": bench_comm_time,      # Fig. 1(b)
+    "stock": bench_stock,              # Fig. 2
+    "bounds": bench_bounds,            # Thm.4 / Prop.5 / Prop.6 / Thm.7
+    "compression": bench_compression,  # Sec. 3/4 ablation
+    "rff": bench_rff,                  # Sec. 4 future-work
+    "adaptive": bench_adaptive,        # Sec. 4 open problem (beyond paper)
+    "lm_protocol": bench_lm_protocol,  # the technique at LM scale (measured)
+    "kernels": bench_kernels,          # Pallas hot-spots
+    "roofline": bench_roofline,        # §Roofline summary
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes for CI")
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else list(SUITES)
+    all_rows, failures = [], []
+    for name in names:
+        t0 = time.time()
+        try:
+            rows = SUITES[name].run(quick=args.quick)
+            all_rows.extend(rows)
+            print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    print_rows(all_rows)
+    if failures:
+        print(f"# FAILED suites: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

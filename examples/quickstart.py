@@ -1,0 +1,35 @@
+"""Quickstart: distributed online learning with kernels in ~40 lines.
+
+Four learners classify a non-linear stream; the dynamic protocol keeps
+them in sync only when their models drift apart.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import simulation
+from repro.core.learners import LearnerConfig
+from repro.core.protocol import ProtocolConfig
+from repro.core.rkhs import KernelSpec
+from repro.data import susy_stream
+
+# one data stream per learner: 4 learners x 500 rounds
+X, Y = susy_stream(T=500, m=4, d=8, seed=0)
+
+learner = LearnerConfig(
+    algo="kernel_sgd", loss="hinge", eta=0.5, lam=0.01,
+    budget=128, kernel=KernelSpec(kind="gaussian", gamma=0.3), dim=8,
+)
+
+print(f"{'protocol':14s} {'errors':>7s} {'syncs':>6s} {'kilobytes':>10s}")
+for kind, kwargs in [("none", {}), ("continuous", {}),
+                     ("periodic", {"period": 10}),
+                     ("dynamic", {"delta": 2.0})]:
+    res = simulation.run_kernel_simulation(
+        learner, ProtocolConfig(kind=kind, **kwargs), X, Y)
+    print(f"{kind:14s} {int(res.cumulative_errors[-1]):7d} "
+          f"{res.num_syncs:6d} {res.total_bytes / 1024:10.1f}")
+
+print("\nThe dynamic protocol approaches the continuous protocol's "
+      "accuracy at a fraction of the communication (paper, Fig. 1).")

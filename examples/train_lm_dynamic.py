@@ -1,0 +1,88 @@
+"""End-to-end driver: train a ~100M-parameter LM with the dynamic
+protocol for a few hundred steps (deliverable (b)).
+
+The model is the assigned mamba2-130m architecture (full width, reduced
+depth by default so a CPU run finishes in minutes; pass --full-depth
+for all 24 layers).  Four learners run local SGD on their own token
+streams; the dynamic operator synchronizes them only on local-condition
+violations.  Checkpoints + protocol state are saved periodically.
+
+    PYTHONPATH=src python examples/train_lm_dynamic.py --steps 300
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import get
+from repro.core.protocol import ProtocolConfig
+from repro.launch.train import init_train_state, make_train_step
+from repro.models import count_params
+from repro.optim import OptimizerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--learners", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--delta", type=float, default=5e-3)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--full-depth", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = get("mamba2_130m")
+    if not args.full_depth:
+        cfg = cfg.with_(n_layers=4)           # ~35M params, CPU-friendly
+    m = args.learners
+
+    pcfg = ProtocolConfig(kind="dynamic", delta=args.delta)
+    opt_cfg = OptimizerConfig(kind="sgd", lr=args.lr, momentum=0.9,
+                              grad_clip=1.0)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, m, opt_cfg)
+    n = count_params(jax.tree.map(lambda x: x[0], state.params))
+    print(f"arch=mamba2_130m layers={cfg.n_layers} params={n/1e6:.1f}M "
+          f"learners={m} protocol=dynamic(delta={args.delta})")
+
+    step_fn = jax.jit(make_train_step(cfg, pcfg, opt_cfg))
+    rng = np.random.default_rng(0)
+
+    t0 = time.time()
+    model_bytes = n * 4
+    for t in range(args.steps):
+        toks = rng.integers(0, cfg.vocab, (m, args.batch, args.seq + 1))
+        half = args.seq // 2
+        toks[..., half + 1: 2 * half + 1] = toks[..., 1: half + 1]  # copy task
+        batch = {"tokens": jnp.asarray(toks[..., :-1], jnp.int32),
+                 "labels": jnp.asarray(toks[..., 1:], jnp.int32)}
+        state, loss = step_fn(state, batch)
+        if t % 20 == 0 or t == args.steps - 1:
+            syncs = int(state.pstate.syncs)
+            comm_gb = 2 * m * model_bytes * syncs / 1e9
+            print(f"step {t:4d} loss={float(loss):7.4f} syncs={syncs:4d} "
+                  f"divergence={float(state.pstate.last_divergence):9.2e} "
+                  f"comm={comm_gb:7.3f}GB "
+                  f"({(time.time()-t0)/(t+1):.2f}s/step)")
+        if args.ckpt_every and (t + 1) % args.ckpt_every == 0:
+            path = ckpt.save_step(args.ckpt_dir, t + 1, state)
+            print(f"  checkpoint -> {path}")
+
+    syncs = int(state.pstate.syncs)
+    saved = 1.0 - syncs / args.steps
+    print(f"\ndone: {syncs}/{args.steps} rounds communicated "
+          f"({saved*100:.0f}% of parameter all-reduces eliminated by the "
+          f"dynamic protocol)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro: Communication-Efficient Distributed Online Learning with Kernels
+
+Paper-faithful protocol core + multi-pod JAX training/serving framework.
+See README.md / DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,107 @@
+"""Pytree checkpointing (msgpack + numpy, no external deps).
+
+Saves/restores arbitrary pytrees of arrays (model params, optimizer
+state, protocol state incl. the reference model) with dtype/shape
+preservation.  Layout: one ``.ckpt`` msgpack file per step +
+``latest`` pointer, atomic rename on write.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+
+def _np_dtype(name: str):
+    """Resolve a dtype name, including ml_dtypes extras (bfloat16)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _encode_leaf(x):
+    arr = np.asarray(x)
+    return {
+        b"__nd__": True,
+        b"dtype": arr.dtype.name.encode(),
+        b"shape": list(arr.shape),
+        b"data": arr.tobytes(),
+    }
+
+
+def _is_encoded(obj) -> bool:
+    return isinstance(obj, dict) and obj.get(b"__nd__") is True
+
+
+def _decode_leaf(obj):
+    name = obj[b"dtype"]
+    if isinstance(name, bytes):
+        name = name.decode()
+    arr = np.frombuffer(obj[b"data"], dtype=_np_dtype(name))
+    return jnp.asarray(arr.reshape(obj[b"shape"]))
+
+
+def save(path: str, tree: PyTree) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        b"treedef": str(treedef).encode(),
+        b"leaves": [_encode_leaf(l) for l in leaves],
+        b"structure": _structure_of(tree),
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def _structure_of(tree: PyTree):
+    """Serializable mirror of the pytree with leaves replaced by 0."""
+    if isinstance(tree, dict):
+        return {k: _structure_of(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        kind = "tuple" if isinstance(tree, tuple) else "list"
+        named = type(tree).__name__ if hasattr(tree, "_fields") else kind
+        return {"__seq__": named, "items": [_structure_of(v) for v in tree]}
+    return 0
+
+
+def restore(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=True)
+    leaves = [_decode_leaf(l) for l in payload[b"leaves"]]
+    like_leaves, treedef = jax.tree.flatten(like)
+    if len(leaves) != len(like_leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, expected {len(like_leaves)}")
+    for got, want in zip(leaves, like_leaves):
+        if tuple(got.shape) != tuple(jnp.shape(want)):
+            raise ValueError(f"shape mismatch: {got.shape} vs {jnp.shape(want)}")
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def save_step(ckpt_dir: str, step: int, tree: PyTree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.ckpt")
+    save(path, tree)
+    with open(os.path.join(ckpt_dir, "latest.tmp"), "w") as f:
+        f.write(os.path.basename(path))
+    os.replace(os.path.join(ckpt_dir, "latest.tmp"),
+               os.path.join(ckpt_dir, "latest"))
+    return path
+
+
+def latest_step(ckpt_dir: str):
+    p = os.path.join(ckpt_dir, "latest")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return os.path.join(ckpt_dir, f.read().strip())

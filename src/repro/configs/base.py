@@ -1,0 +1,63 @@
+"""Config registry.  One module per assigned architecture; each module
+defines ``CONFIG`` (exact assigned sizes, source cited) and registers it.
+
+``get(name)`` returns the full config; ``get_smoke(name)`` the reduced
+same-family variant used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "qwen2_vl_2b",
+    "recurrentgemma_9b",
+    "mamba2_130m",
+    "olmoe_1b_7b",
+    "whisper_large_v3",
+    "granite_moe_1b_a400m",
+    "qwen2_5_3b",
+    "granite_8b",
+    "qwen3_14b",
+    "minicpm3_4b",
+    "paper_kernel",   # the paper's own kernel-learner "architecture"
+]
+
+# CLI aliases (dashes as given in the assignment)
+ALIASES = {
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "mamba2-130m": "mamba2_130m",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "whisper-large-v3": "whisper_large_v3",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "granite-8b": "granite_8b",
+    "qwen3-14b": "qwen3_14b",
+    "minicpm3-4b": "minicpm3_4b",
+}
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get(name: str) -> ModelConfig:
+    name = ALIASES.get(name, name)
+    if name not in _REGISTRY:
+        importlib.import_module(f"repro.configs.{name}")
+    return _REGISTRY[name]
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return get(name).smoke()
+
+
+def all_arch_ids(include_paper: bool = False) -> List[str]:
+    ids = [a for a in ARCH_IDS if a != "paper_kernel"]
+    return ids + (["paper_kernel"] if include_paper else [])

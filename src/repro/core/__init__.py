@@ -1,0 +1,22 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+- protocol:    sync operators (none/continuous/periodic/dynamic) over
+               stacked-learner pytrees — mesh-agnostic.
+- rkhs:        support-vector expansions, Prop. 2 averaging, divergence.
+- learners:    (approximately) loss-proportional online learners.
+- compression: truncation / projection with exact epsilon.
+- accounting:  byte-exact communication model of Sec. 3.
+- criterion:   Def. 1 efficiency audit + theorem-level bound checks.
+- simulation:  serial m-learner + coordinator experiment driver.
+- rff:         Random Fourier Features learner (Sec. 4 future work).
+"""
+from . import accounting, compression, criterion, learners, protocol, rff, rkhs, simulation
+from .learners import LearnerConfig
+from .protocol import ProtocolConfig, ProtocolState
+from .rkhs import KernelSpec, SVModel
+
+__all__ = [
+    "accounting", "compression", "criterion", "learners", "protocol",
+    "rff", "rkhs", "simulation",
+    "LearnerConfig", "ProtocolConfig", "ProtocolState", "KernelSpec", "SVModel",
+]

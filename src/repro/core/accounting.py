@@ -1,0 +1,122 @@
+"""Byte-exact communication accounting (paper, Sec. 3).
+
+The paper measures cumulative communication C(T, m) = sum_t c(f_t) in
+bytes, under a designated-coordinator topology with the *trivial
+communication-reduction strategy*:
+
+  upload  (learner i -> coordinator):  |S_t^i| B_alpha  +  |S_t^i \\ Sbar_{t'}| B_x
+  download(coordinator -> learner i):  |Sbar_t| B_alpha +  |Sbar_t \\ S_t^i| B_x
+
+where t' is the last synchronization time, B_x in O(d) bytes per
+support vector and B_alpha in O(1) bytes per coefficient.  Support
+vectors already known to the receiving side are never re-sent; identity
+is tracked through the unique ``sv_id`` tags of rkhs.SVModel.
+
+For linear models a synchronization costs m uploads + m downloads of a
+fixed-size weight vector.
+
+Beyond the paper (DESIGN.md Sec. 3 hardware-adaptation): on a TPU mesh
+there is no coordinator; averaging is a ring all-reduce moving
+2 (m-1)/m |theta| bytes per participant.  ``allreduce_bytes`` reports
+that cost so EXPERIMENTS.md can compare both topologies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ByteModel:
+    """B_x = bytes per support vector (O(d)); B_alpha per coefficient."""
+
+    dim: int
+    dtype_bytes: int = 4
+    id_bytes: int = 4
+
+    @property
+    def B_x(self) -> int:
+        # vector payload + its id tag
+        return self.dim * self.dtype_bytes + self.id_bytes
+
+    @property
+    def B_alpha(self) -> int:
+        # coefficient + the id it belongs to
+        return self.dtype_bytes + self.id_bytes
+
+
+def _idset(ids: np.ndarray) -> set:
+    ids = np.asarray(ids).reshape(-1)
+    return set(int(i) for i in ids if i >= 0)
+
+
+def sync_bytes_kernel(
+    bm: ByteModel,
+    local_ids: Sequence[np.ndarray],
+    coordinator_known: set,
+) -> tuple[int, set]:
+    """Bytes for one synchronization of kernel models.
+
+    local_ids: per-learner arrays of active sv_ids at sync time.
+    coordinator_known: ids of Sbar_{t'} cached at the coordinator.
+
+    Returns (bytes, new_coordinator_known = Sbar_t ids).
+    """
+    sets = [_idset(a) for a in local_ids]
+    union = set().union(*sets) if sets else set()
+    total = 0
+    for s in sets:
+        # upload: all coefficients, only new support vectors
+        total += len(s) * bm.B_alpha + len(s - coordinator_known) * bm.B_x
+        # download: all average coefficients, only unknown-to-i vectors
+        total += len(union) * bm.B_alpha + len(union - s) * bm.B_x
+    return total, union
+
+
+def sync_bytes_linear(num_params: int, m: int, dtype_bytes: int = 4) -> int:
+    """m uploads + m downloads of a fixed-size weight vector."""
+    return 2 * m * num_params * dtype_bytes
+
+
+def allreduce_bytes(num_params: int, m: int, dtype_bytes: int = 4) -> int:
+    """Ring all-reduce cost: each of m participants moves
+    2 (m-1)/m * |theta| bytes (reduce-scatter + all-gather)."""
+    if m <= 1:
+        return 0
+    return int(2 * (m - 1) * num_params * dtype_bytes)
+
+
+class CommunicationLedger:
+    """Running C(T, m) with per-round records, used by the simulation
+    driver and the figure benchmarks."""
+
+    def __init__(self, bm: ByteModel):
+        self.bm = bm
+        self.coordinator_known: set = set()
+        self.total = 0
+        self.rounds: list[int] = []          # bytes per round
+        self.sync_rounds: list[int] = []     # round indices of syncs
+
+    def record_no_sync(self) -> None:
+        self.rounds.append(0)
+
+    def record_kernel_sync(self, local_ids: Sequence[np.ndarray], t: int) -> int:
+        b, known = sync_bytes_kernel(self.bm, local_ids, self.coordinator_known)
+        self.coordinator_known = known
+        self.total += b
+        self.rounds.append(b)
+        self.sync_rounds.append(t)
+        return b
+
+    def record_linear_sync(self, num_params: int, m: int, t: int) -> int:
+        b = sync_bytes_linear(num_params, m, self.bm.dtype_bytes)
+        self.total += b
+        self.rounds.append(b)
+        self.sync_rounds.append(t)
+        return b
+
+    @property
+    def cumulative(self) -> np.ndarray:
+        return np.cumsum(np.asarray(self.rounds, dtype=np.int64))

@@ -1,0 +1,129 @@
+"""Model compression for support-vector expansions (Sec. 3/4).
+
+Two families from the paper:
+
+- **Truncation** (Kivinen et al. [12]): drop support vectors with small
+  coefficients.  For SGD with learning rate lambda the compression
+  error is bounded by epsilon in O((1/lambda)(1-lambda)^tau) for budget
+  tau, which makes the compressed update approximately
+  loss-proportional and the dynamic protocol *adaptive* (and with
+  consistency, *efficient*).
+- **Projection** (Orabona et al. [15], Wang & Vucetic [20]): project
+  the dropped support vectors onto the span of the kept ones, i.e.
+  solve  K_kk c = K_kd beta  and fold c into the kept coefficients.
+  Strictly smaller epsilon than truncation for the same budget, at
+  O(tau^3) compression cost; no formal bound on |S| in the paper.
+
+Both return the new model *and* the exact compression error
+epsilon = ||f - f~||_H, so the caller can verify Lemma 3 / Theorem 4
+empirically (tests/test_bounds.py) and drive the epsilon-dependent
+terms of the loss bound.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .rkhs import KernelSpec, SVModel, active_mask, gram
+
+Array = jnp.ndarray
+
+
+def _top_tau_mask(f: SVModel, tau: int) -> Array:
+    """Boolean mask of the tau active slots with the largest |alpha|."""
+    act = active_mask(f)
+    score = jnp.where(act, jnp.abs(f.alpha), -jnp.inf)
+    order = jnp.argsort(-score)  # descending; inactive (-inf) sink to the end
+    keep_idx = order[:tau]
+    mask = jnp.zeros(f.budget, bool).at[keep_idx].set(True)
+    return mask & act
+
+
+def _masked_model(f: SVModel, keep: Array) -> SVModel:
+    return SVModel(
+        sv=jnp.where(keep[:, None], f.sv, 0.0),
+        alpha=jnp.where(keep, f.alpha, 0.0),
+        sv_id=jnp.where(keep, f.sv_id, -1),
+    )
+
+
+def _pack_to_budget(f: SVModel, keep: Array, tau: int) -> SVModel:
+    """Gather the kept slots into a tau-slot model (static shapes)."""
+    # indices of kept slots first (stable), padded with dropped slots
+    order = jnp.argsort(~keep)  # kept (False<True inverted) first, stable
+    idx = order[:tau]
+    valid = keep[idx]
+    return SVModel(
+        sv=jnp.where(valid[:, None], f.sv[idx], 0.0),
+        alpha=jnp.where(valid, f.alpha[idx], 0.0),
+        sv_id=jnp.where(valid, f.sv_id[idx], -1),
+    )
+
+
+def truncate(
+    spec: KernelSpec, f: SVModel, tau: int
+) -> Tuple[SVModel, Array]:
+    """Truncate f to at most tau support vectors (smallest-|alpha| rule).
+
+    Returns (f_trunc with budget tau, epsilon) where
+    epsilon^2 = beta^T K_dd beta over the dropped part — the exact RKHS
+    norm of the removed component.
+    """
+    keep = _top_tau_mask(f, tau)
+    act = active_mask(f)
+    dropped = act & ~keep
+    beta = jnp.where(dropped, f.alpha, 0.0)
+    K = gram(spec, f.sv, f.sv)
+    eps_sq = jnp.maximum(beta @ K @ beta, 0.0)
+    return _pack_to_budget(f, keep, tau), jnp.sqrt(eps_sq)
+
+
+def project(
+    spec: KernelSpec, f: SVModel, tau: int, ridge: float = 1e-6
+) -> Tuple[SVModel, Array]:
+    """Compress f to tau SVs by projecting dropped SVs on the kept span.
+
+    Solves (K_kk + ridge I) c = K_kd beta and adds c to the kept
+    coefficients.  epsilon^2 = beta^T K_dd beta - beta^T K_dk c  (the
+    residual of the orthogonal projection; clipped at 0 for numerical
+    safety).
+    """
+    keep = _top_tau_mask(f, tau)
+    act = active_mask(f)
+    dropped = act & ~keep
+    beta = jnp.where(dropped, f.alpha, 0.0)
+
+    K = gram(spec, f.sv, f.sv)
+    keep_f = keep.astype(K.dtype)
+    # Restrict to kept rows/cols by masking; ridge keeps the masked-out
+    # diagonal invertible without affecting the kept block's solution.
+    K_kk = K * keep_f[:, None] * keep_f[None, :]
+    K_kk = K_kk + (ridge + (1.0 - keep_f)) * jnp.eye(f.budget, dtype=K.dtype)
+    rhs = (K @ beta) * keep_f
+    c = jnp.linalg.solve(K_kk, rhs)
+    c = c * keep_f
+
+    eps_sq = beta @ K @ beta - beta @ K @ c
+    eps_sq = jnp.maximum(eps_sq, 0.0)
+
+    merged = f._replace(alpha=jnp.where(keep, f.alpha + c, f.alpha))
+    return _pack_to_budget(merged, keep, tau), jnp.sqrt(eps_sq)
+
+
+def compress(
+    spec: KernelSpec, f: SVModel, tau: int, method: str = "truncate"
+) -> Tuple[SVModel, Array]:
+    if method == "truncate":
+        return truncate(spec, f, tau)
+    if method == "project":
+        return project(spec, f, tau)
+    raise ValueError(f"unknown compression method {method!r}")
+
+
+def truncation_error_bound(lam: float, tau: int) -> float:
+    """The [12] bound:  epsilon in O((1/lam) (1-lam)^tau)  for SGD with
+    learning rate lam and budget tau.  Used by tests to check the
+    measured epsilon stays within a constant of the bound."""
+    return (1.0 / lam) * (1.0 - lam) ** tau

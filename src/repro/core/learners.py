@@ -1,0 +1,214 @@
+"""Online learning algorithms A = (H, phi, ell) used by the protocols.
+
+All learners expose a functional update
+
+    update(state, (x, y)) -> (new_state, loss)
+
+and are members of the (approximately) loss-proportional convex update
+family the paper's analysis requires:
+
+- drift bound:      ||f - phi(f, x, y)||  <=  eta * ell(f, x, y)
+- convex target:    the update moves toward the minimizer set of ell
+- gamma-proportional: ||phi(f) - phi(g)||^2 <= ||f-g||^2
+                      - gamma^2 (ell(f) - ell(g))^2
+
+Implemented:
+- ``KernelSGD``  — NORMA (Kivinen, Smola, Williamson 2004): regularized
+  SGD in an RKHS; coefficient decay (1 - eta*lam) plus one new SV per
+  lossy round.  With a fixed budget the slot eviction is the truncation
+  compression, making the update *approximately* loss-proportional
+  (Lemma 3) with the epsilon of compression.py.
+- ``KernelPA``   — kernel Passive-Aggressive (Crammer et al. 2006):
+  exactly loss-proportional convex update, tau_pa = min(C, ell/k(x,x)).
+- ``LinearSGD`` / ``LinearPA`` — the Euclidean originals from [10],
+  used as the paper's linear baselines (Figs. 1 and 2).
+
+Losses: ``hinge`` (classification, y in {-1,+1}) and ``squared``
+(regression).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .rkhs import (
+    KernelSpec,
+    SVModel,
+    empty_model,
+    insert_sv,
+    predict,
+    scale_model,
+)
+
+Array = jnp.ndarray
+
+# A global cap on the number of learners used only to mint unique
+# support-vector ids (id = counter * MAX_LEARNERS + learner_id).
+MAX_LEARNERS = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class LearnerConfig:
+    """Configuration of an online learner.
+
+    algo: kernel_sgd | kernel_pa | linear_sgd | linear_pa
+    loss: hinge | squared
+    eta: learning rate (SGD); also the drift constant of Prop. 6.
+    lam: regularization (NORMA decay (1 - eta*lam)).
+    C: PA aggressiveness cap.
+    budget: SV budget tau (kernel learners).
+    evict: smallest | oldest  (inline truncation policy).
+    kernel: KernelSpec for the RKHS.
+    dim: input dimensionality d.
+    """
+
+    algo: str = "kernel_sgd"
+    loss: str = "hinge"
+    eta: float = 0.5
+    lam: float = 0.01
+    C: float = 1.0
+    budget: int = 64
+    evict: str = "smallest"
+    kernel: KernelSpec = dataclasses.field(default_factory=KernelSpec)
+    dim: int = 8
+
+    def __post_init__(self):
+        if self.algo not in ("kernel_sgd", "kernel_pa", "linear_sgd", "linear_pa"):
+            raise ValueError(f"unknown algo {self.algo!r}")
+        if self.loss not in ("hinge", "squared"):
+            raise ValueError(f"unknown loss {self.loss!r}")
+
+    @property
+    def is_kernel(self) -> bool:
+        return self.algo.startswith("kernel")
+
+
+class KernelLearnerState(NamedTuple):
+    model: SVModel
+    counter: Array      # int32 — per-learner insertion counter
+    learner_id: Array   # int32 — index of this learner in [m]
+
+
+class LinearLearnerState(NamedTuple):
+    w: Array            # (d,)
+    b: Array            # ()
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def _loss_and_grad(loss: str, yhat: Array, y: Array) -> Tuple[Array, Array]:
+    """Returns (ell, dell/dyhat)."""
+    if loss == "hinge":
+        ell = jnp.maximum(0.0, 1.0 - y * yhat)
+        g = jnp.where(ell > 0.0, -y, 0.0)
+        return ell, g
+    # squared
+    r = yhat - y
+    return 0.5 * r * r, r
+
+
+# ---------------------------------------------------------------------------
+# Kernel learners
+# ---------------------------------------------------------------------------
+
+
+def init_kernel_state(cfg: LearnerConfig, learner_id: int) -> KernelLearnerState:
+    return KernelLearnerState(
+        model=empty_model(cfg.budget, cfg.dim),
+        counter=jnp.zeros((), jnp.int32),
+        learner_id=jnp.asarray(learner_id, jnp.int32),
+    )
+
+
+def kernel_update(
+    cfg: LearnerConfig, state: KernelLearnerState, example: Tuple[Array, Array]
+) -> Tuple[KernelLearnerState, Array]:
+    x, y = example
+    f = state.model
+    yhat = predict(cfg.kernel, f, x[None])[0]
+    ell, g = _loss_and_grad(cfg.loss, yhat, y)
+
+    kxx = {
+        "gaussian": jnp.asarray(1.0, jnp.float32),
+        "linear": jnp.sum(x * x),
+        "poly": (jnp.sum(x * x) + cfg.kernel.coef0) ** cfg.kernel.degree,
+    }[cfg.kernel.kind]
+
+    if cfg.algo == "kernel_sgd":
+        f = scale_model(f, 1.0 - cfg.eta * cfg.lam)
+        alpha_new = -cfg.eta * g
+    else:  # kernel_pa
+        tau_pa = jnp.minimum(cfg.C, ell / jnp.maximum(kxx, 1e-12))
+        direction = y if cfg.loss == "hinge" else -jnp.sign(yhat - y)
+        alpha_new = tau_pa * direction
+
+    new_id = state.counter * MAX_LEARNERS + state.learner_id
+    do_insert = jnp.abs(alpha_new) > 0.0
+
+    f_ins = insert_sv(f, x, alpha_new, new_id, evict=cfg.evict)
+    f2 = SVModel(
+        sv=jnp.where(do_insert, f_ins.sv, f.sv),
+        alpha=jnp.where(do_insert, f_ins.alpha, f.alpha),
+        sv_id=jnp.where(do_insert, f_ins.sv_id, f.sv_id),
+    )
+    new_state = KernelLearnerState(
+        model=f2,
+        counter=state.counter + do_insert.astype(jnp.int32),
+        learner_id=state.learner_id,
+    )
+    return new_state, ell
+
+
+# ---------------------------------------------------------------------------
+# Linear learners (the paper's baselines)
+# ---------------------------------------------------------------------------
+
+
+def init_linear_state(cfg: LearnerConfig) -> LinearLearnerState:
+    return LinearLearnerState(w=jnp.zeros((cfg.dim,), jnp.float32), b=jnp.zeros((), jnp.float32))
+
+
+def linear_update(
+    cfg: LearnerConfig, state: LinearLearnerState, example: Tuple[Array, Array]
+) -> Tuple[LinearLearnerState, Array]:
+    x, y = example
+    yhat = state.w @ x + state.b
+    ell, g = _loss_and_grad(cfg.loss, yhat, y)
+
+    if cfg.algo == "linear_sgd":
+        w = (1.0 - cfg.eta * cfg.lam) * state.w - cfg.eta * g * x
+        b = state.b - cfg.eta * g
+    else:  # linear_pa
+        tau_pa = jnp.minimum(cfg.C, ell / jnp.maximum(jnp.sum(x * x) + 1.0, 1e-12))
+        direction = y if cfg.loss == "hinge" else -jnp.sign(yhat - y)
+        w = state.w + tau_pa * direction * x
+        b = state.b + tau_pa * direction
+    return LinearLearnerState(w=w, b=b), ell
+
+
+# ---------------------------------------------------------------------------
+# Uniform entry points
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: LearnerConfig, learner_id: int = 0):
+    if cfg.is_kernel:
+        return init_kernel_state(cfg, learner_id)
+    return init_linear_state(cfg)
+
+
+def update(cfg: LearnerConfig, state, example):
+    if cfg.is_kernel:
+        return kernel_update(cfg, state, example)
+    return linear_update(cfg, state, example)
+
+
+def gamma_of(cfg: LearnerConfig) -> float:
+    """The loss-proportionality constant used in Thm. 4's bound."""
+    return cfg.eta if cfg.algo.endswith("sgd") else min(cfg.C, 1.0)

@@ -1,0 +1,246 @@
+"""RKHS models in support-vector expansion, with Prop. 2 averaging.
+
+The paper generalizes the synchronization protocols from Euclidean
+weight vectors to a reproducing kernel Hilbert space H where models are
+represented by their dual (support vector) expansion
+
+    f(.) = sum_{x in S} alpha_x k(x, .)
+
+JAX/XLA require static shapes, so an expansion is stored with a fixed
+**budget** of slots; inactive slots carry ``alpha = 0`` and ``sv_id =
+-1``.  This matches the paper's own conclusion that streaming kernel
+learners must bound their model size (truncation / projection — see
+compression.py), and makes the budget a first-class config knob tau.
+
+Every support vector carries a globally unique integer id (assigned by
+the learner at insertion time).  Ids make the *union* of support sets
+(Prop. 2) well defined under the fixed-budget representation and drive
+the byte-exact communication accounting of Sec. 3 (a vector already
+known to the coordinator is never re-transmitted).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Kernel functions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """k : X x X -> R.  ``kind`` in {gaussian, linear, poly}."""
+
+    kind: str = "gaussian"
+    gamma: float = 1.0          # gaussian: exp(-gamma ||x-y||^2)
+    degree: int = 3             # poly: (x.y + coef0)^degree
+    coef0: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in ("gaussian", "linear", "poly"):
+            raise ValueError(f"unknown kernel {self.kind!r}")
+
+
+def gram(spec: KernelSpec, X: Array, Y: Array) -> Array:
+    """Dense Gram matrix K[i, j] = k(X[i], Y[j]).  Pure-jnp reference.
+
+    The Pallas-accelerated path lives in repro.kernels.ops.gram; this
+    function is the semantic definition used by tests as the oracle and
+    by small CPU simulations directly.
+    """
+    X = X.astype(jnp.float32)
+    Y = Y.astype(jnp.float32)
+    if spec.kind == "linear":
+        return X @ Y.T
+    if spec.kind == "poly":
+        return (X @ Y.T + spec.coef0) ** spec.degree
+    # gaussian
+    xx = jnp.sum(X * X, axis=-1)[:, None]
+    yy = jnp.sum(Y * Y, axis=-1)[None, :]
+    sq = jnp.maximum(xx + yy - 2.0 * (X @ Y.T), 0.0)
+    return jnp.exp(-spec.gamma * sq)
+
+
+def kernel_diag(spec: KernelSpec, X: Array) -> Array:
+    """k(x, x) for each row (cheap; avoids materializing the diagonal)."""
+    if spec.kind == "linear":
+        return jnp.sum(X * X, axis=-1)
+    if spec.kind == "poly":
+        return (jnp.sum(X * X, axis=-1) + spec.coef0) ** spec.degree
+    return jnp.ones(X.shape[0], jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Support-vector expansion with a fixed budget
+# ---------------------------------------------------------------------------
+
+
+class SVModel(NamedTuple):
+    """A budgeted support-vector expansion.
+
+    sv:     (budget, d)  support vector inputs (zeros when inactive)
+    alpha:  (budget,)    coefficients (0 when inactive)
+    sv_id:  (budget,)    unique int32 id, -1 when the slot is empty
+    """
+
+    sv: Array
+    alpha: Array
+    sv_id: Array
+
+    @property
+    def budget(self) -> int:
+        return self.sv.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.sv.shape[1]
+
+
+def empty_model(budget: int, dim: int, dtype=jnp.float32) -> SVModel:
+    return SVModel(
+        sv=jnp.zeros((budget, dim), dtype),
+        alpha=jnp.zeros((budget,), dtype),
+        sv_id=-jnp.ones((budget,), jnp.int32),
+    )
+
+
+def active_mask(f: SVModel) -> Array:
+    return f.sv_id >= 0
+
+
+def num_active(f: SVModel) -> Array:
+    return jnp.sum(active_mask(f).astype(jnp.int32))
+
+
+def predict(spec: KernelSpec, f: SVModel, X: Array) -> Array:
+    """f(X) = K(X, S) alpha, masking inactive slots."""
+    a = jnp.where(active_mask(f), f.alpha, 0.0)
+    return gram(spec, X, f.sv) @ a
+
+
+def norm_sq(spec: KernelSpec, f: SVModel) -> Array:
+    """||f||_H^2 = alpha^T K(S, S) alpha."""
+    a = jnp.where(active_mask(f), f.alpha, 0.0)
+    return a @ gram(spec, f.sv, f.sv) @ a
+
+
+def dist_sq(spec: KernelSpec, f: SVModel, g: SVModel) -> Array:
+    """||f - g||_H^2 = <f,f> + <g,g> - 2<f,g>  (paper, Sec. 2)."""
+    af = jnp.where(active_mask(f), f.alpha, 0.0)
+    ag = jnp.where(active_mask(g), g.alpha, 0.0)
+    return (
+        af @ gram(spec, f.sv, f.sv) @ af
+        + ag @ gram(spec, g.sv, g.sv) @ ag
+        - 2.0 * (af @ gram(spec, f.sv, g.sv) @ ag)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prop. 2: averaging a model configuration
+# ---------------------------------------------------------------------------
+
+
+def average_stacked(stacked: SVModel) -> SVModel:
+    """Average of a stacked configuration (leading axis m) — Prop. 2.
+
+    The average is the expansion over the union of support sets
+    Sbar = U_i S^i with coefficients alphabar_s = 1/m sum_i alphabar_s^i
+    (zero-padded).  Under the budgeted representation the union is the
+    concatenation of all slots with coefficients divided by m; slots
+    that share an sv_id are *semantically* merged (they represent the
+    same point mass in H, and downstream Gram algebra treats duplicated
+    rows exactly as a merged coefficient would).  The result has budget
+    m * tau.
+    """
+    m, tau, d = stacked.sv.shape
+    return SVModel(
+        sv=stacked.sv.reshape(m * tau, d),
+        alpha=jnp.where(
+            (stacked.sv_id >= 0), stacked.alpha / m, 0.0
+        ).reshape(m * tau),
+        sv_id=stacked.sv_id.reshape(m * tau),
+    )
+
+
+def union_unique_count(stacked_or_avg_sv_id: Array) -> Array:
+    """|Sbar| — the number of *distinct* active support vector ids.
+
+    Used by the communication accounting: duplicated ids (support
+    vectors shared among learners after an earlier synchronization) are
+    transmitted / stored once.
+    """
+    ids = stacked_or_avg_sv_id.reshape(-1)
+    active = ids >= 0
+    ids_sorted = jnp.sort(jnp.where(active, ids, jnp.iinfo(jnp.int32).max))
+    is_new = jnp.concatenate(
+        [ids_sorted[:1] < jnp.iinfo(jnp.int32).max,
+         (ids_sorted[1:] != ids_sorted[:-1]) & (ids_sorted[1:] < jnp.iinfo(jnp.int32).max)]
+    )
+    return jnp.sum(is_new.astype(jnp.int32))
+
+
+def stacked_dist_to(spec: KernelSpec, stacked: SVModel, ref: SVModel) -> Array:
+    """Per-learner ||f_i - r||^2, shape (m,).  Local-condition values."""
+
+    def one(f: SVModel) -> Array:
+        return dist_sq(spec, f, ref)
+
+    return jax.vmap(one)(stacked)
+
+
+def divergence_stacked(spec: KernelSpec, stacked: SVModel) -> Array:
+    """delta(f) = 1/m sum_i ||f_i - fbar||^2 over RKHS models (Eq. 1)."""
+    fbar = average_stacked(stacked)
+    return jnp.mean(stacked_dist_to(spec, stacked, fbar))
+
+
+# ---------------------------------------------------------------------------
+# Slot insertion (shared by the online learners)
+# ---------------------------------------------------------------------------
+
+
+def insert_sv(
+    f: SVModel,
+    x: Array,
+    alpha_new: Array,
+    new_id: Array,
+    evict: str = "smallest",
+) -> SVModel:
+    """Insert a support vector into a budgeted expansion.
+
+    If a free slot exists it is used; otherwise the slot chosen by the
+    eviction policy is overwritten (``smallest`` |alpha| — the
+    truncation rule of Kivinen et al. [12]; ``oldest`` — FIFO).  The
+    eviction IS the paper's model-compression step: dropping a slot
+    perturbs the exact loss-proportional update by at most
+    epsilon = |alpha_evicted| * sqrt(k(x_e, x_e)), which is what makes
+    the update *approximately* loss-proportional (Lemma 3).
+    """
+    act = active_mask(f)
+    # score: free slots first (score -inf), then per-policy.
+    if evict == "smallest":
+        score = jnp.where(act, jnp.abs(f.alpha), -jnp.inf)
+    elif evict == "oldest":
+        score = jnp.where(act, f.sv_id.astype(jnp.float32), -jnp.inf)
+    else:
+        raise ValueError(f"unknown eviction policy {evict!r}")
+    slot = jnp.argmin(score)
+    return SVModel(
+        sv=f.sv.at[slot].set(x.astype(f.sv.dtype)),
+        alpha=f.alpha.at[slot].set(alpha_new.astype(f.alpha.dtype)),
+        sv_id=f.sv_id.at[slot].set(new_id.astype(jnp.int32)),
+    )
+
+
+def scale_model(f: SVModel, c: Array) -> SVModel:
+    """c * f  (coefficient scaling — e.g. the (1 - eta*lambda) decay)."""
+    return f._replace(alpha=f.alpha * c)

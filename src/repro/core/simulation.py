@@ -1,0 +1,270 @@
+"""Serial simulation of the m-learner + coordinator system.
+
+This is the paper-faithful experiment driver: m local learners process
+individual streams; the chosen protocol (none / continuous / periodic /
+dynamic) decides when to synchronize; the ledger accounts bytes exactly
+as in Sec. 3.  It produces the quantities plotted in Figs. 1 and 2:
+cumulative loss/error, cumulative communication (over time), number of
+synchronizations, and quiescence behaviour.
+
+The per-round compute (m learner updates + local-condition checks) is
+one jitted function; the byte accounting (set algebra over sv_ids) runs
+in numpy outside jit, mirroring a real deployment where the
+coordinator's bookkeeping is host-side.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import accounting, compression, learners, rkhs
+from .learners import LearnerConfig
+from .protocol import ProtocolConfig
+from .rkhs import KernelSpec, SVModel
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Everything the figure benchmarks need."""
+
+    cumulative_loss: np.ndarray        # (T,) summed over learners
+    cumulative_bytes: np.ndarray       # (T,)
+    cumulative_errors: np.ndarray      # (T,) 0/1 prediction mistakes
+    sync_rounds: np.ndarray            # indices where a sync happened
+    divergences: np.ndarray            # (T,) measured delta(f_t)
+    eps_history: np.ndarray            # compression errors at syncs
+    num_syncs: int
+    total_bytes: int
+    total_loss: float
+
+    @property
+    def quiescence_round(self) -> Optional[int]:
+        """First round after which no further synchronization happened."""
+        if len(self.sync_rounds) == 0:
+            return 0
+        last = int(self.sync_rounds[-1])
+        return last if last < len(self.cumulative_loss) - 1 else None
+
+
+# ---------------------------------------------------------------------------
+# Kernel-learner simulation
+# ---------------------------------------------------------------------------
+
+
+def run_kernel_simulation(
+    lcfg: LearnerConfig,
+    pcfg: ProtocolConfig,
+    X: np.ndarray,          # (T, m, d) per-round per-learner inputs
+    Y: np.ndarray,          # (T, m)
+    sync_budget: Optional[int] = None,
+    compress_method: str = "truncate",
+) -> SimResult:
+    """Run T rounds of m kernel learners under the given protocol.
+
+    sync_budget: budget of the synchronized (averaged) model that is
+    shipped back to the learners.  Defaults to the learner budget tau —
+    i.e. the average (union, budget m*tau) is compressed back to tau
+    before redistribution; the measured compression error feeds the
+    epsilon term of Thm. 4.
+    """
+    T, m, d = X.shape
+    assert d == lcfg.dim
+    tau = lcfg.budget
+    sync_budget = sync_budget or tau
+    spec = lcfg.kernel
+
+    states = [learners.init_state(lcfg, i) for i in range(m)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+    vupdate = jax.jit(jax.vmap(partial(learners.update, lcfg)))
+
+    @jax.jit
+    def local_distances(models: SVModel, ref: SVModel):
+        return rkhs.stacked_dist_to(spec, models, ref)
+
+    @jax.jit
+    def divergence(models: SVModel):
+        return rkhs.divergence_stacked(spec, models)
+
+    @jax.jit
+    def make_sync(models: SVModel):
+        fbar = rkhs.average_stacked(models)          # budget m*tau
+        fsync, eps = compression.compress(spec, fbar, sync_budget, compress_method)
+        return fsync, eps
+
+    def set_all(models: SVModel, fsync: SVModel) -> SVModel:
+        # learners adopt the (compressed) average; pad/truncate to tau.
+        def pad(field, fill):
+            v = field
+            if v.shape[0] < tau:
+                pad_width = [(0, tau - v.shape[0])] + [(0, 0)] * (v.ndim - 1)
+                v = jnp.pad(v, pad_width, constant_values=fill)
+            return v[:tau]
+
+        one = SVModel(sv=pad(fsync.sv, 0.0), alpha=pad(fsync.alpha, 0.0),
+                      sv_id=pad(fsync.sv_id, -1))
+        return SVModel(
+            sv=jnp.broadcast_to(one.sv[None], (m,) + one.sv.shape),
+            alpha=jnp.broadcast_to(one.alpha[None], (m,) + one.alpha.shape),
+            sv_id=jnp.broadcast_to(one.sv_id[None], (m,) + one.sv_id.shape),
+        )
+
+    # reference model starts as the (empty) average
+    reference, _ = make_sync(stacked.model)
+
+    ledger = accounting.CommunicationLedger(accounting.ByteModel(dim=d))
+    cum_loss, cum_bytes, cum_err, divs, eps_hist = [], [], [], [], []
+    total_loss = 0.0
+    total_err = 0.0
+
+    vpredict = jax.jit(
+        jax.vmap(lambda f, x: rkhs.predict(spec, f, x[None])[0])
+    )
+
+    for t in range(T):
+        xb = jnp.asarray(X[t]); yb = jnp.asarray(Y[t])
+        # service quality before update (prediction errors)
+        yhat = vpredict(stacked.model, xb)
+        if lcfg.loss == "hinge":
+            total_err += float(jnp.sum((jnp.sign(yhat) != yb)))
+        else:
+            total_err += float(jnp.sum((yhat - yb) ** 2))
+
+        stacked, losses = vupdate(stacked, (xb, yb))
+        total_loss += float(jnp.sum(losses))
+
+        models = stacked.model
+        do_sync = False
+        if pcfg.kind == "continuous":
+            do_sync = True
+        elif pcfg.kind == "periodic":
+            do_sync = ((t + 1) % pcfg.period) == 0
+        elif pcfg.kind == "dynamic":
+            if ((t + 1) % pcfg.mini_batch) == 0:
+                dists = np.asarray(local_distances(models, reference))
+                do_sync = bool((dists > pcfg.delta).any())
+
+        if do_sync:
+            ids = np.asarray(models.sv_id)
+            fsync, eps = make_sync(models)
+            eps_hist.append(float(eps))
+            new_models = set_all(models, fsync)
+            stacked = stacked._replace(model=new_models)
+            reference = jax.tree.map(lambda x: x, fsync)
+            ledger.record_kernel_sync([ids[i] for i in range(m)], t)
+        else:
+            ledger.record_no_sync()
+
+        divs.append(float(divergence(stacked.model)))
+        cum_loss.append(total_loss)
+        cum_err.append(total_err)
+        cum_bytes.append(ledger.total)
+
+    return SimResult(
+        cumulative_loss=np.asarray(cum_loss),
+        cumulative_bytes=np.asarray(cum_bytes, dtype=np.int64),
+        cumulative_errors=np.asarray(cum_err),
+        sync_rounds=np.asarray(ledger.sync_rounds, dtype=np.int64),
+        divergences=np.asarray(divs),
+        eps_history=np.asarray(eps_hist),
+        num_syncs=len(ledger.sync_rounds),
+        total_bytes=int(ledger.total),
+        total_loss=float(total_loss),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Linear-learner simulation (the paper's baseline hypothesis class)
+# ---------------------------------------------------------------------------
+
+
+def run_linear_simulation(
+    lcfg: LearnerConfig,
+    pcfg: ProtocolConfig,
+    X: np.ndarray,
+    Y: np.ndarray,
+) -> SimResult:
+    T, m, d = X.shape
+    states = [learners.init_state(lcfg, i) for i in range(m)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+    vupdate = jax.jit(jax.vmap(partial(learners.update, lcfg)))
+
+    @jax.jit
+    def dists_to(st, ref):
+        return jax.vmap(
+            lambda s: jnp.sum((s.w - ref.w) ** 2) + (s.b - ref.b) ** 2
+        )(st)
+
+    @jax.jit
+    def diverg(st):
+        wbar = jnp.mean(st.w, axis=0); bbar = jnp.mean(st.b)
+        return jnp.mean(jnp.sum((st.w - wbar) ** 2, -1) + (st.b - bbar) ** 2)
+
+    @jax.jit
+    def avg(st):
+        return learners.LinearLearnerState(
+            w=jnp.mean(st.w, axis=0), b=jnp.mean(st.b)
+        )
+
+    reference = avg(stacked)
+    ledger = accounting.CommunicationLedger(accounting.ByteModel(dim=d))
+    cum_loss, cum_bytes, cum_err, divs = [], [], [], []
+    total_loss = 0.0; total_err = 0.0
+    nparams = d + 1
+
+    vpredict = jax.jit(jax.vmap(lambda s, x: s.w @ x + s.b))
+
+    for t in range(T):
+        xb = jnp.asarray(X[t]); yb = jnp.asarray(Y[t])
+        yhat = vpredict(stacked, xb)
+        if lcfg.loss == "hinge":
+            total_err += float(jnp.sum((jnp.sign(yhat) != yb)))
+        else:
+            total_err += float(jnp.sum((yhat - yb) ** 2))
+
+        stacked, losses = vupdate(stacked, (xb, yb))
+        total_loss += float(jnp.sum(losses))
+
+        do_sync = False
+        if pcfg.kind == "continuous":
+            do_sync = True
+        elif pcfg.kind == "periodic":
+            do_sync = ((t + 1) % pcfg.period) == 0
+        elif pcfg.kind == "dynamic":
+            if ((t + 1) % pcfg.mini_batch) == 0:
+                dists = np.asarray(dists_to(stacked, reference))
+                do_sync = bool((dists > pcfg.delta).any())
+
+        if do_sync:
+            mean = avg(stacked)
+            stacked = learners.LinearLearnerState(
+                w=jnp.broadcast_to(mean.w[None], stacked.w.shape),
+                b=jnp.broadcast_to(mean.b[None], stacked.b.shape),
+            )
+            reference = mean
+            ledger.record_linear_sync(nparams, m, t)
+        else:
+            ledger.record_no_sync()
+
+        divs.append(float(diverg(stacked)))
+        cum_loss.append(total_loss)
+        cum_err.append(total_err)
+        cum_bytes.append(ledger.total)
+
+    return SimResult(
+        cumulative_loss=np.asarray(cum_loss),
+        cumulative_bytes=np.asarray(cum_bytes, dtype=np.int64),
+        cumulative_errors=np.asarray(cum_err),
+        sync_rounds=np.asarray(ledger.sync_rounds, dtype=np.int64),
+        divergences=np.asarray(divs),
+        eps_history=np.zeros((0,)),
+        num_syncs=len(ledger.sync_rounds),
+        total_bytes=int(ledger.total),
+        total_loss=float(total_loss),
+    )

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper compute hot-spots."""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,134 @@
+"""Blocked causal flash attention (Pallas, TPU target).
+
+Targets the dominant *memory* roofline term of dense prefill
+(EXPERIMENTS.md §Perf, qwen3-14b x prefill_32k): the XLA path
+materializes the fp32 (S, S) score matrix in HBM per head
+(S=32768 -> 4.3 GB/head); this kernel streams (bq, bk) tiles through
+VMEM with the online-softmax recurrence, so HBM traffic drops from
+O(S^2) to O(S * d) per head:
+
+  traffic_xla   ~ S*S*4 * 2      (write + read scores)    = 8.6 GB/head
+  traffic_flash ~ S*d*2 * 3      (q, k, v reads) + S*d*2  = 0.03 GB/head
+
+Layout: q/k/v (BH, S, hd).  Grid (BH, S/bq, S/bk); the kv-block axis is
+the innermost (sequential on TPU), carrying the running max m, the
+normalizer l and the unnormalized accumulator acc in VMEM scratch.
+Causal masking is applied on the diagonal tiles; fully-masked tiles
+above the diagonal are skipped via ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, scale: float, causal: bool, bq: int, bk: int,
+                  window: int = 0):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # skip tiles strictly above the causal diagonal, and (with a
+    # sliding window) tiles strictly below the band
+    run = (k_start <= q_start + bq - 1) if causal else (ki >= 0)
+    if window > 0:
+        run = run & (k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)              # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)              # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)              # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if causal or window > 0:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = kpos <= qpos if causal else (kpos == kpos)
+            if window > 0:
+                mask = mask & (kpos > qpos - window)
+            s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # (bq, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                # (bq, 1)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,       # (BH, S, hd)
+    k: jnp.ndarray,       # (BH, L, hd)
+    v: jnp.ndarray,       # (BH, L, hd)
+    *,
+    scale: float | None = None,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = DEFAULT_BQ,
+    block_k: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """window > 0: sliding-window (local) attention — off-band tiles
+    are skipped entirely, so HBM traffic AND compute drop to
+    O(S * window) (recurrentgemma's 2048-window local attention; the
+    long_500k dense variant)."""
+    BH, S, hd = q.shape
+    L = k.shape[1]
+    assert S % block_q == 0 and L % block_k == 0, (S, L, block_q, block_k)
+    scale = scale if scale is not None else hd ** -0.5
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, bq=block_q, bk=block_k,
+        window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, S // block_q, L // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=_scratch(block_q, hd),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(bq: int, hd: int):
+    """VMEM scratch for the online-softmax carry (acc, m, l)."""
+    from jax.experimental.pallas import tpu as pltpu
+    return [
+        pltpu.VMEM((bq, hd), jnp.float32),
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, 1), jnp.float32),
+    ]

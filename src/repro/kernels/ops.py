@@ -1,0 +1,118 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Responsibilities:
+- pad inputs to MXU-aligned block multiples (zero padding is exact for
+  the feature dim of every kernel kind; padded rows/cols are cropped
+  from outputs, and padded alpha/beta entries are zero so quadform is
+  exact);
+- choose interpret mode automatically off-TPU (this container is
+  CPU-only: interpret=True executes the kernel bodies in Python so the
+  TPU kernels are validated for correctness here and compiled for real
+  on TPU);
+- fall back to the pure-jnp reference for tiny shapes where a Pallas
+  launch is not worth it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .gram import gram_pallas
+from .quadform import quadform_pallas
+from .rff import rff_pallas
+
+_LANE = 128          # TPU lane width: last-dim alignment
+_MIN_PALLAS = 128    # below this, use the jnp reference
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    target = ((n + mult - 1) // mult) * mult
+    if target == n:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - n)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "gamma", "degree", "coef0", "block_m", "block_n", "force_pallas"),
+)
+def gram(X, Y, *, kind="gaussian", gamma=1.0, degree=3, coef0=1.0,
+         block_m=128, block_n=128, force_pallas=False):
+    """K(X, Y): (M, d), (N, d) -> (M, N) fp32."""
+    M, N = X.shape[0], Y.shape[0]
+    if not force_pallas and max(M, N) < _MIN_PALLAS:
+        return ref.gram_ref(X, Y, kind=kind, gamma=gamma, degree=degree, coef0=coef0)
+    Xp = _pad_to(_pad_to(X, 0, block_m), 1, _LANE)
+    Yp = _pad_to(_pad_to(Y, 0, block_n), 1, _LANE)
+    K = gram_pallas(
+        Xp, Yp, kind=kind, gamma=gamma, degree=degree, coef0=coef0,
+        block_m=block_m, block_n=block_n, interpret=_interpret(),
+    )
+    return K[:M, :N]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_features", "block_m", "block_d", "force_pallas")
+)
+def rff_features(X, W, b, *, num_features=None, block_m=128, block_d=128,
+                 force_pallas=False):
+    """phi(X): (M, d) with W (D, d), b (D,) -> (M, D) fp32."""
+    M, D = X.shape[0], W.shape[0]
+    nf = num_features or D
+    if not force_pallas and max(M, D) < _MIN_PALLAS:
+        return ref.rff_ref(X, W, b, num_features=nf)
+    Xp = _pad_to(_pad_to(X, 0, block_m), 1, _LANE)
+    Wp = _pad_to(_pad_to(W, 0, block_d), 1, _LANE)
+    bp = _pad_to(b, 0, block_d)
+    Z = rff_pallas(
+        Xp, Wp, bp, num_features=nf, block_m=block_m, block_d=block_d,
+        interpret=_interpret(),
+    )
+    return Z[:M, :D]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "gamma", "degree", "coef0", "block_m", "block_n", "force_pallas"),
+)
+def quadform(X, Y, alpha, beta, *, kind="gaussian", gamma=1.0, degree=3,
+             coef0=1.0, block_m=128, block_n=128, force_pallas=False):
+    """alpha^T K(X, Y) beta -> scalar fp32, without materializing K in HBM."""
+    M, N = X.shape[0], Y.shape[0]
+    if not force_pallas and max(M, N) < _MIN_PALLAS:
+        return ref.quadform_ref(X, Y, alpha, beta, kind=kind, gamma=gamma,
+                                degree=degree, coef0=coef0)
+    Xp = _pad_to(_pad_to(X, 0, block_m), 1, _LANE)
+    Yp = _pad_to(_pad_to(Y, 0, block_n), 1, _LANE)
+    ap = _pad_to(alpha, 0, block_m)
+    bp = _pad_to(beta, 0, block_n)
+    return quadform_pallas(
+        Xp, Yp, ap, bp, kind=kind, gamma=gamma, degree=degree, coef0=coef0,
+        block_m=block_m, block_n=block_n, interpret=_interpret(),
+    )
+
+
+def rkhs_dist_sq(X, Y, alpha, beta, *, kind="gaussian", gamma=1.0,
+                 degree=3, coef0=1.0):
+    """||f - g||_H^2 via three fused quadratic forms (never materializes
+    any Gram matrix in HBM) — the divergence-monitoring hot path."""
+    kw = dict(kind=kind, gamma=gamma, degree=degree, coef0=coef0)
+    return (
+        quadform(X, X, alpha, alpha, **kw)
+        + quadform(Y, Y, beta, beta, **kw)
+        - 2.0 * quadform(X, Y, alpha, beta, **kw)
+    )

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the exact semantics the kernels must reproduce; the test
+suite sweeps shapes/dtypes and asserts allclose against them.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_ref(X, Y, *, kind="gaussian", gamma=1.0, degree=3, coef0=1.0):
+    X = X.astype(jnp.float32)
+    Y = Y.astype(jnp.float32)
+    cross = X @ Y.T
+    if kind == "linear":
+        return cross
+    if kind == "poly":
+        return (cross + coef0) ** degree
+    xx = jnp.sum(X * X, axis=-1)[:, None]
+    yy = jnp.sum(Y * Y, axis=-1)[None, :]
+    sq = jnp.maximum(xx + yy - 2.0 * cross, 0.0)
+    return jnp.exp(-gamma * sq)
+
+
+def rff_ref(X, W, b, *, num_features=None):
+    X = X.astype(jnp.float32)
+    W = W.astype(jnp.float32)
+    D = num_features or W.shape[0]
+    return jnp.sqrt(2.0 / D) * jnp.cos(X @ W.T + b.astype(jnp.float32))
+
+
+def quadform_ref(X, Y, alpha, beta, *, kind="gaussian", gamma=1.0,
+                 degree=3, coef0=1.0):
+    K = gram_ref(X, Y, kind=kind, gamma=gamma, degree=degree, coef0=coef0)
+    return alpha.astype(jnp.float32) @ K @ beta.astype(jnp.float32)

@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init): the dry-run — and only the dry-run — sees 512
+placeholder host devices so ``jax.make_mesh`` can build the production
+meshes (16x16 single-pod, 2x16x16 multi-pod).
+
+For each combination this script:
+  1. builds the jitted step (protocol train / prefill / serve) with
+     explicit in/out shardings,
+  2. ``.lower(**input_specs(...)).compile()`` — proving the sharding
+     config is coherent (no mismatched collectives, no OOM at compile),
+  3. prints ``compiled.memory_analysis()`` and ``cost_analysis()``,
+  4. parses the post-SPMD HLO for collective bytes (all-gather /
+     all-reduce / reduce-scatter / all-to-all / collective-permute),
+  5. writes a JSON record consumed by the roofline analysis.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_14b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import all_arch_ids, get
+from repro.launch import sharding as shd
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import data_axes, make_production_mesh, num_learners
+from repro.launch.serve import make_decode_step, make_prefill_step
+from repro.launch.specs import SHAPES, input_specs, variant_for
+from repro.launch.train import make_train_step, train_state_specs
+from repro.core.protocol import ProtocolConfig
+from repro.optim import OptimizerConfig
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in post-SPMD HLO,
+    per collective kind.  These are per-device tensor sizes (the HLO is
+    the per-partition program)."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+def _apply_baseline_emulation():
+    """REPRO_BASELINE=1: reproduce the pre-optimization implementation
+    (einsum MoE dispatch, grouped SDPA everywhere, no activation
+    constraints) so stale baseline records can be regenerated and the
+    emulation validated against untouched baseline records."""
+    from repro.models import attention as attn_mod
+    from repro.models import moe as moe_mod
+
+    def sdpa_orig(q, k, v, mask, scale, specs=(None, None)):
+        return attn_mod._sdpa_grouped(q, k, v, mask, scale)
+
+    attn_mod._sdpa = sdpa_orig
+    moe_mod.moe_forward = moe_mod.moe_forward_einsum
+
+
+def build_combo(arch: str, shape_name: str, mesh):
+    """Returns (fn, in_shardings, arg_specs) for jax.jit."""
+    baseline = os.environ.get("REPRO_BASELINE") == "1"
+    if baseline:
+        _apply_baseline_emulation()
+    cfg0 = get(arch)
+    cfg = variant_for(cfg0, shape_name).with_(remat=True, unroll_scan=True,
+                                              shard_activations=not baseline,
+                                              remat_policy=os.environ.get("REPRO_REMAT", "full"))
+    shape = SHAPES[shape_name]
+    model_size = mesh.shape["model"]
+    daxes = data_axes(mesh)
+    m = num_learners(mesh)
+    nd = num_learners(mesh)
+
+    if shape["kind"] == "train":
+        pcfg = ProtocolConfig(kind="dynamic", delta=1e-3)
+        opt_cfg = OptimizerConfig(kind="sgd", lr=1e-2, momentum=0.9)
+        fn = make_train_step(cfg, pcfg, opt_cfg)
+
+        state_specs = train_state_specs(cfg, m, opt_cfg)
+        batch_specs = specs_mod.train_batch_specs(cfg, m, shape)
+
+        stacked_pspec = shd.param_pspec(
+            state_specs.params, model_size, learner_axes=daxes)
+        opt_pspec = shd.param_pspec(
+            state_specs.opt, model_size, learner_axes=daxes)
+        ref_pspec = shd.param_pspec(
+            state_specs.pstate.reference, model_size, learner_axes=daxes)
+        from repro.core.protocol import ProtocolState
+        pstate_pspec = ProtocolState(
+            reference=ref_pspec, step=P(), syncs=P(), bytes_sent=P(),
+            last_divergence=P(), delta_scale=P())
+        from repro.launch.train import TrainState
+        state_pspec = TrainState(params=stacked_pspec, opt=opt_pspec,
+                                 pstate=pstate_pspec, step=P())
+        batch_pspec = shd.batch_pspec(batch_specs, daxes)
+
+        in_shardings = (shd.to_shardings(mesh, state_pspec),
+                        shd.to_shardings(mesh, batch_pspec))
+        out_shardings = (shd.to_shardings(mesh, state_pspec),
+                         NamedSharding(mesh, P()))
+        return fn, in_shardings, out_shardings, (state_specs, batch_specs), cfg
+
+    shardable_b = shape["batch"] % nd == 0
+    cfg = cfg.with_(act_batch_axes=daxes if shardable_b else ())
+    params_specs = specs_mod.param_specs(cfg)
+    params_pspec = shd.param_pspec(params_specs, model_size, learner_axes=None)
+    B = shape["batch"]
+
+    if shape["kind"] == "prefill":
+        fn = make_prefill_step(cfg)
+        batch_specs = specs_mod.prefill_batch_specs(cfg, shape)
+        cache_specs = specs_mod.cache_specs(cfg, B, shape["seq"])
+        batch_pspec = jax.tree.map(
+            lambda l: P(*(((daxes if len(daxes) > 1 else daxes[0]),)
+                          + (None,) * (len(l.shape) - 1))), batch_specs)
+        cache_pspec = shd.cache_pspec(cache_specs, daxes, B, nd, model_size)
+        in_shardings = (shd.to_shardings(mesh, params_pspec),
+                        shd.to_shardings(mesh, batch_pspec),
+                        shd.to_shardings(mesh, cache_pspec))
+        out_shardings = (NamedSharding(mesh, P()),
+                         shd.to_shardings(mesh, cache_pspec))
+        return fn, in_shardings, out_shardings, (params_specs, batch_specs,
+                                                 cache_specs), cfg
+
+    # decode
+    fn = make_decode_step(cfg)
+    dspecs = input_specs(cfg0, shape_name)
+    tok_spec, pos_spec, cache_specs = (dspecs["token"], dspecs["pos"],
+                                       dspecs["caches"])
+    shardable_batch = B % nd == 0
+    tok_pspec = P(*(((daxes if len(daxes) > 1 else daxes[0]) if shardable_batch
+                     else None), None))
+    cache_pspec = shd.cache_pspec(cache_specs, daxes, B, nd, model_size)
+    in_shardings = (shd.to_shardings(mesh, params_pspec),
+                    shd.to_shardings(mesh, cache_pspec),
+                    NamedSharding(mesh, tok_pspec),
+                    NamedSharding(mesh, P()))
+    out_shardings = (NamedSharding(mesh, tok_pspec),
+                     shd.to_shardings(mesh, cache_pspec))
+    return fn, in_shardings, out_shardings, (params_specs, cache_specs,
+                                             tok_spec, pos_spec), cfg
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, outdir: str):
+    mesh_tag = "multi" if multi_pod else "single"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, in_sh, out_sh, arg_specs, cfg = build_combo(arch, shape_name, mesh)
+
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    def _get(obj, *names):
+        for name in names:
+            v = None
+            if isinstance(obj, dict):
+                v = obj.get(name)
+            if v is None:
+                v = getattr(obj, name, None)
+            if v is not None:
+                try:
+                    return float(v)
+                except Exception:
+                    pass
+        return None
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_tag,
+        "devices": int(mesh.size),
+        "kind": SHAPES[shape_name]["kind"],
+        "flops": _get(cost, "flops"),
+        "bytes_accessed": _get(cost, "bytes accessed", "bytes_accessed"),
+        "transcendentals": _get(cost, "transcendentals"),
+        "argument_size": _get(mem, "argument_size_in_bytes"),
+        "output_size": _get(mem, "output_size_in_bytes"),
+        "temp_size": _get(mem, "temp_size_in_bytes"),
+        "generated_code_size": _get(mem, "generated_code_size_in_bytes"),
+        "collective_bytes": coll,
+        "collective_total": float(sum(coll.values())),
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "n_collective_ops": len(_COLL_RE.findall(hlo)),
+    }
+
+    print(f"== {arch} x {shape_name} x {mesh_tag} ({mesh.size} devices) ==")
+    print("memory_analysis:", {k: record[k] for k in
+                               ("argument_size", "output_size", "temp_size")})
+    print("cost_analysis: flops=%.3e bytes=%.3e" % (record["flops"] or -1,
+                                                    record["bytes_accessed"] or -1))
+    print("collectives:", coll)
+    print(f"lower={t_lower:.1f}s compile={t_compile:.1f}s")
+
+    os.makedirs(outdir, exist_ok=True)
+    out_path = os.path.join(outdir, f"{arch}__{shape_name}__{mesh_tag}.json")
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in all_arch_ids():
+            for s in SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape_name in combos:
+        try:
+            run_one(arch, shape_name, args.multi_pod, args.outdir)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, shape_name, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print(f"all {len(combos)} combos lowered+compiled OK")
+
+
+if __name__ == "__main__":
+    main()

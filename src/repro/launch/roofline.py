@@ -1,0 +1,161 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) record produced by dryrun.py:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s          [s]
+  memory term     = HLO_bytes_per_device / HBM_bw               [s]
+  collective term = collective_bytes_per_device * f / link_bw   [s]
+
+``cost_analysis()`` of the compiled partitioned module reports
+PER-DEVICE flops/bytes (calibrated: a 1024^3 matmul sharded over 256
+devices reports 2.15e9/256 flops).  Collective bytes come from the
+post-SPMD HLO text; an all-reduce of X bytes moves ~2X over the ring
+(reduce-scatter + all-gather), other collectives ~X — the factor is
+applied per kind.
+
+MODEL_FLOPS uses the 6*N*D convention (2*N*D for inference-forward,
+N = active non-embedding params for MoE); the ratio
+MODEL_FLOPS / (HLO_FLOPs * devices) exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.specs import SHAPES
+
+_COLL_FACTOR = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather round trip
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def active_params(cfg) -> int:
+    """Non-embedding (active, for MoE) parameter count for 6ND."""
+    from repro.models.config import param_count
+    total = param_count(cfg)
+    emb = cfg.padded_vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    body = total - emb
+    if cfg.n_experts:
+        # scale expert tensors by top_k / n_experts
+        expert = len([k for k in cfg.pattern if k == "moe"]) * \
+            cfg.n_experts * 3 * cfg.d_model * cfg.expert_ff
+        body = body - expert + expert * cfg.top_k / cfg.n_experts
+    return int(body)
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    sh = SHAPES[shape_name]
+    n = active_params(cfg)
+    if sh["kind"] == "train":
+        tokens = sh["batch"] * sh["seq"]
+        return 6.0 * n * tokens
+    if sh["kind"] == "prefill":
+        tokens = sh["batch"] * sh["seq"]
+        return 2.0 * n * tokens
+    tokens = sh["batch"] * 1
+    return 2.0 * n * tokens
+
+
+def analyze_record(rec: Dict) -> Dict:
+    from repro.configs import get
+    from repro.launch.specs import variant_for
+    cfg = variant_for(get(rec["arch"]), rec["shape"])
+
+    devices = rec["devices"]
+    compute_s = (rec["flops"] or 0.0) / PEAK_FLOPS_BF16
+    memory_s = (rec["bytes_accessed"] or 0.0) / HBM_BW
+    coll_bytes = sum(
+        _COLL_FACTOR.get(k, 1.0) * v
+        for k, v in (rec.get("collective_bytes") or {}).items())
+    collective_s = coll_bytes / ICI_BW
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, rec["shape"])
+    hlo_global = (rec["flops"] or 0.0) * devices
+    ratio = mf / hlo_global if hlo_global else float("nan")
+
+    bound_s = max(terms.values())
+    mfu_bound = (mf / devices / PEAK_FLOPS_BF16) / bound_s if bound_s else 0.0
+
+    suggestion = _suggest(rec, cfg, dominant, ratio)
+    return {
+        **rec,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": ratio,
+        "mfu_upper_bound": mfu_bound,
+        "suggestion": suggestion,
+    }
+
+
+def _suggest(rec, cfg, dominant, ratio) -> str:
+    if dominant == "collective":
+        kinds = rec.get("collective_bytes") or {}
+        top = max(kinds, key=kinds.get) if kinds else "?"
+        return (f"dominated by {top}: overlap it with compute or reshard to "
+                f"remove the largest resharding (likely the logits/vocab or "
+                f"expert all-to-all path)")
+    if dominant == "memory":
+        return ("HBM-bound: fuse/keep activations in bf16, increase "
+                "arithmetic intensity (bigger per-device batch), or shard "
+                "the largest resident tensor (KV cache / logits)")
+    if ratio is not None and ratio < 0.5:
+        return ("compute-bound but <50% useful flops: remove recompute/"
+                "redundant ops (remat policy, duplicate projections, "
+                "dense-MoE decode)")
+    return "compute-bound near useful-flops roofline: good placement"
+
+
+def load_records(outdir: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(analyzed: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful ratio | MFU bound |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for a in analyzed:
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {a['compute_s']:.3e} | {a['memory_s']:.3e} "
+            f"| {a['collective_s']:.3e} | **{a['dominant']}** "
+            f"| {a['useful_ratio']:.2f} | {a['mfu_upper_bound']*100:.0f}% |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--json-out", default="experiments/roofline.json")
+    args = ap.parse_args()
+    recs = [analyze_record(r) for r in load_records(args.outdir)]
+    recs.sort(key=lambda r: (r["shape"], r["arch"], r["mesh"]))
+    print(markdown_table(recs))
+    os.makedirs(os.path.dirname(args.json_out), exist_ok=True)
+    with open(args.json_out, "w") as f:
+        json.dump(recs, f, indent=2)
+    for r in recs:
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} -> "
+              f"{r['dominant']:10s} | {r['suggestion']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Serving steps (prefill / decode) used by the dry-run and the
+serving engine.
+
+decode_32k / long_500k lower ``serve_step``: ONE new token against a
+context-length KV cache (or SSM/LRU state), per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def make_prefill_step(cfg: ModelConfig):
+    api = build(cfg)
+
+    def prefill_step(params, batch, caches):
+        return api.prefill(params, batch, caches)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    api = build(cfg)
+
+    def serve_step(params, caches, token, pos):
+        logits, new_caches = api.decode(params, caches, token, pos)
+        next_token = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)
+        return next_token, new_caches
+
+    return serve_step

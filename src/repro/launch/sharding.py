@@ -1,0 +1,164 @@
+"""Sharding rules: param/cache pytrees -> PartitionSpec pytrees.
+
+Baseline scheme (see DESIGN.md Sec. 5, iterated in EXPERIMENTS.md
+Sec. Perf):
+
+- tensor-parallel over the ``model`` axis on *merged* head dims, FFN
+  hidden dims, expert dims, and the padded vocab;
+- the protocol's learner axis (leading dim of stacked training state)
+  over the data axes ``("pod", "data")``;
+- replication for any dim not divisible by the model-axis size
+  (checked per-leaf at spec-build time, never an invalid spec);
+- caches: batch dim over the data axes when divisible.
+
+Rules are matched on the path of each leaf, on the LAST ``ndim`` dims
+of the leaf; leading dims (scan-stacked layers, learner stacking) get
+``None`` / the learner axes.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# (path regex, spec for trailing dims).  "M" marks the model axis; the
+# number of entries fixes how many trailing dims the rule governs.
+_PARAM_RULES = [
+    (r"embed/table$",        ("M", None)),
+    (r"dec_pos/table$",      (None, None)),
+    (r"lm_head/w$",          (None, "M")),
+    (r"lm_head/b$",          ("M",)),
+    (r"(wq|wk|wv)/w$",       (None, "M")),
+    (r"(wq|wk|wv)/b$",       ("M",)),
+    (r"wo/w$",               ("M", None)),
+    (r"wo/b$",               (None,)),
+    (r"mlp/(wi|wg)/w$",      (None, "M")),
+    (r"mlp/(wi|wg)/b$",      ("M",)),
+    (r"mlp/wo/w$",           ("M", None)),
+    (r"mlp/wo/b$",           (None,)),
+    (r"moe/router/w$",       (None, None)),
+    (r"moe/(wi|wg)$",        ("M", None, None)),   # expert-parallel
+    (r"moe/wo$",             ("M", None, None)),
+    (r"ssm/in_proj/w$",      (None, None)),        # mixed concat out-dim
+    (r"ssm/out_proj/w$",     ("M", None)),
+    (r"rglru/(w_y|w_x)/w$",  (None, "M")),
+    (r"rglru/(w_a|w_i)/w$",  ("M", "M_diag")),     # see note below
+    (r"rglru/(w_a|w_i)/b$",  ("M",)),
+    (r"rglru/w_o/w$",        ("M", None)),
+    (r"rglru/Lambda$",       ("M",)),
+    (r"mla_?.*w_dq/w$",      (None, None)),
+    (r"w_dq/w$",             (None, None)),
+    (r"w_uq/w$",             (None, "M")),
+    (r"w_dkv/w$",            (None, None)),
+    (r"w_kr/w$",             (None, None)),
+    (r"(w_uk|w_uv)/w$",      (None, "M")),
+]
+
+# rglru gate matrices are (W, W); sharding both dims over the same axis
+# is invalid — shard rows only.
+def _fix_special(spec):
+    return tuple(None if s == "M_diag" else s for s in spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _apply_rule(spec_tail, shape, model_size: int):
+    """Validate divisibility; replicate dims that don't divide."""
+    out = []
+    for dim_spec, dim in zip(spec_tail, shape):
+        if dim_spec == "M" and dim % model_size == 0 and dim >= model_size:
+            out.append("model")
+        else:
+            out.append(None)
+    return tuple(out)
+
+
+def param_pspec(params: PyTree, model_size: int,
+                learner_axes: Optional[Tuple[str, ...]] = None) -> PyTree:
+    """PartitionSpec pytree for a (possibly learner-stacked) param tree.
+
+    learner_axes: if given, leaves are assumed to carry a leading
+    learner dim sharded over these mesh axes.
+    """
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        n_lead = 1 if learner_axes else 0
+        body_shape = shape[n_lead:]
+        tail_spec = None
+        for pat, spec in _PARAM_RULES:
+            if re.search(pat, ps):
+                spec = _fix_special(spec)
+                if len(spec) <= len(body_shape):
+                    tail = _apply_rule(spec, body_shape[len(body_shape) - len(spec):],
+                                       model_size)
+                    tail_spec = (None,) * (len(body_shape) - len(spec)) + tail
+                break
+        if tail_spec is None:
+            tail_spec = (None,) * len(body_shape)
+        lead = ((learner_axes if len(learner_axes) > 1 else learner_axes[0]),) \
+            if learner_axes else ()
+        return P(*(lead + tail_spec))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def cache_pspec(caches: PyTree, batch_axes: Tuple[str, ...], batch: int,
+                n_batch_axes_size: int, model_size: int = 0,
+                seq_min: int = 4096) -> PyTree:
+    """Shard cache batch dims over the data axes, and long context
+    dims over the model axis (flash-decoding style: attention keys are
+    partitioned; GSPMD turns the softmax/contraction reductions into
+    small all-reduces while the O(B*L) cache reads stay local).
+
+    Cache leaves are stacked (repeats, B, L, ...) by the stage
+    machinery; dim 1 is treated as batch when its size equals ``batch``,
+    dim 2 as context length when >= seq_min and divisible.
+    """
+    ax = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+
+    def spec_for(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if (len(shape) >= 2 and shape[1] == batch
+                and batch % n_batch_axes_size == 0):
+            spec[1] = ax
+        if (model_size and len(shape) >= 3 and shape[2] >= seq_min
+                and shape[2] % model_size == 0):
+            spec[2] = "model"
+        return P(*spec)
+
+    return jax.tree.map(spec_for, caches)
+
+
+def batch_pspec(batch: PyTree, learner_axes: Tuple[str, ...]) -> PyTree:
+    """Training batches are (m, b, ...) — learner dim over data axes."""
+    ax = learner_axes if len(learner_axes) > 1 else learner_axes[0]
+
+    def spec_for(leaf):
+        return P(*((ax,) + (None,) * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec_for, batch)
+
+
+def to_shardings(mesh, pspecs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,120 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+Shapes (from the assignment):
+  train_4k     seq=4096    global_batch=256   -> protocol train_step
+  prefill_32k  seq=32768   global_batch=32    -> prefill_step
+  decode_32k   seq=32768   global_batch=128   -> serve_step (1 token)
+  long_500k    seq=524288  global_batch=1     -> serve_step (1 token)
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStructs
+for every model input — no device allocation ever happens here (the
+model/cache shapes come from ``jax.eval_shape`` over the real init
+functions, so the dry run exercises exactly the production pytrees).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build
+from repro.models.config import ModelConfig
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k":    dict(kind="train",   seq=4_096,   batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768,  batch=32),
+    "decode_32k":  dict(kind="decode",  seq=32_768,  batch=128),
+    "long_500k":   dict(kind="decode",  seq=524_288, batch=1),
+}
+
+CACHE_MARGIN = 128   # decode caches hold seq_len context + margin slots
+
+
+def variant_for(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """long_500k requires sub-quadratic attention: dense/VLM/audio archs
+    switch to the sliding-window variant (DESIGN.md long_500k policy).
+    SSM/hybrid archs run natively."""
+    if shape_name == "long_500k" and cfg.attn_kind != "none" and cfg.window == 0:
+        return cfg.with_(window=cfg.long_context_window)
+    return cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, m: int, shape: Dict[str, Any]):
+    """Stacked-learner batch: leading dim m (one slice per learner)."""
+    B, S = shape["batch"], shape["seq"]
+    assert B % m == 0, (B, m)
+    b = B // m
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.arch_type == "vlm":
+        sv = cfg.vision_tokens
+        return {
+            "embeds": _sds((m, b, sv, cfg.d_model), dt),
+            "tokens": _sds((m, b, S - sv), jnp.int32),
+            "labels": _sds((m, b, S - sv), jnp.int32),
+        }
+    if cfg.arch_type == "audio":
+        return {
+            "frames": _sds((m, b, cfg.n_audio_frames, cfg.d_model), dt),
+            "tokens": _sds((m, b, S), jnp.int32),
+            "labels": _sds((m, b, S), jnp.int32),
+        }
+    return {
+        "tokens": _sds((m, b, S), jnp.int32),
+        "labels": _sds((m, b, S), jnp.int32),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: Dict[str, Any]):
+    B, S = shape["batch"], shape["seq"]
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.arch_type == "vlm":
+        sv = cfg.vision_tokens
+        return {
+            "embeds": _sds((B, sv, cfg.d_model), dt),
+            "tokens": _sds((B, S - sv), jnp.int32),
+        }
+    if cfg.arch_type == "audio":
+        return {
+            "frames": _sds((B, cfg.n_audio_frames, cfg.d_model), dt),
+            "tokens": _sds((B, S), jnp.int32),
+        }
+    return {"tokens": _sds((B, S), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, B: int, length: int):
+    api = build(cfg)
+    return jax.eval_shape(lambda: api.init_caches(B, length))
+
+
+def param_specs(cfg: ModelConfig):
+    api = build(cfg)
+    return jax.eval_shape(api.init, jax.random.PRNGKey(0))
+
+
+def stacked_param_specs(cfg: ModelConfig, m: int):
+    base = param_specs(cfg)
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((m,) + tuple(l.shape), l.dtype), base)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, m: int = 1):
+    """The batch-side ShapeDtypeStructs for one (arch, shape) combo."""
+    shape = SHAPES[shape_name]
+    cfg = variant_for(cfg, shape_name)
+    if shape["kind"] == "train":
+        return train_batch_specs(cfg, m, shape)
+    if shape["kind"] == "prefill":
+        return prefill_batch_specs(cfg, shape)
+    # decode: one new token + caches of seq_len context
+    B = shape["batch"]
+    return {
+        "token": _sds((B, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "caches": cache_specs(cfg, B, shape["seq"] + CACHE_MARGIN),
+    }

@@ -1,0 +1,482 @@
+"""Attention variants: GQA (+qk_norm, bias, sliding window, M-RoPE),
+MLA (multi-head latent attention), and cross-attention.
+
+Projections use **merged head dims** (n_heads * head_dim) so tensor-
+parallel sharding works even when the head count does not divide the
+model-axis size (the merged dim is always a multiple of 128).
+
+KV caches:
+- full cache:   k/v (B, S_max, K, hd) + scalar position counter.
+- ring cache:   sliding-window archs keep (B, window, K, hd) plus a
+  per-slot position array; slots are overwritten mod window, masking is
+  by stored position.  long_500k decode therefore allocates O(window),
+  not O(524288), for windowed archs.
+- MLA cache:    the compressed per-token latent (B, S, kv_lora) plus
+  the shared rope key (B, S, rope_dim) — the cache-size reduction that
+  motivates MLA.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_mrope, apply_rope, dense, dense_init, rmsnorm
+
+Array = jnp.ndarray
+Params = Dict[str, Array]
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: Array            # (B, L, K, hd)  L = S_max or window
+    v: Array            # (B, L, K, hd)
+    slot_pos: Array     # (L,) int32 position stored in each slot (-1 empty)
+
+    @property
+    def length(self) -> int:
+        return self.k.shape[1]
+
+
+class MLACache(NamedTuple):
+    c: Array            # (B, L, kv_lora)
+    k_rope: Array       # (B, L, rope_dim)
+    slot_pos: Array     # (L,)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), dtype)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), dtype)}
+    return p
+
+
+def mla_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    qk_dim = cfg.mla_nope_dim + cfg.mla_rope_dim
+    keys = jax.random.split(key, 8)
+    p = {
+        "w_dq": dense_init(keys[0], d, cfg.mla_q_lora, dtype),
+        "q_norm": {"scale": jnp.ones((cfg.mla_q_lora,), dtype)},
+        "w_uq": dense_init(keys[1], cfg.mla_q_lora, cfg.n_heads * qk_dim, dtype),
+        "w_dkv": dense_init(keys[2], d, cfg.mla_kv_lora, dtype),
+        "kv_norm": {"scale": jnp.ones((cfg.mla_kv_lora,), dtype)},
+        "w_kr": dense_init(keys[3], d, cfg.mla_rope_dim, dtype),
+        "w_uk": dense_init(keys[4], cfg.mla_kv_lora, cfg.n_heads * cfg.mla_nope_dim, dtype),
+        "w_uv": dense_init(keys[5], cfg.mla_kv_lora, cfg.n_heads * cfg.mla_v_dim, dtype),
+        "wo": dense_init(keys[6], cfg.n_heads * cfg.mla_v_dim, d, dtype),
+    }
+    return p
+
+
+def cross_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, dtype),
+    }
+
+
+def attn_init(key, cfg: ModelConfig, dtype) -> Params:
+    if cfg.attn_kind == "mla":
+        return mla_init(key, cfg, dtype)
+    return gqa_init(key, cfg, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product with GQA grouping
+# ---------------------------------------------------------------------------
+
+
+from .layers import constrain as _constrain
+
+
+def _flash_sdpa(cfg: ModelConfig, q: Array, k: Array, v: Array,
+                causal: bool) -> Array:
+    """Fused flash-attention path (kernels/flash.py).  Repeats GQA kv
+    heads, folds (B, H) into the kernel grid, pads S to the block size.
+    Used on TPU for full-attention prefill/train; interpret mode makes
+    it testable on CPU."""
+    from repro.kernels.flash import flash_attention
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    if K != H:
+        k = jnp.repeat(k, H // K, axis=2)
+        v = jnp.repeat(v, H // K, axis=2)
+    bq = bk = min(128, S)
+    Sp = ((S + bq - 1) // bq) * bq
+    def fold(t):
+        t = jnp.moveaxis(t, 2, 1).reshape(B * H, S, hd)
+        if Sp != S:
+            t = jnp.pad(t, ((0, 0), (0, Sp - S), (0, 0)))
+        return t
+    qf, kf, vf = fold(q), fold(k), fold(v)
+    interp = jax.default_backend() != "tpu"
+    o = flash_attention(qf, kf, vf, causal=causal, block_q=bq, block_k=bk,
+                        interpret=interp)
+    # NOTE on padding: with causal=True padded queries attend only to
+    # padded keys (rows are dropped below); padded keys sit at positions
+    # > any real query, so real rows are unaffected.  For non-causal,
+    # padded keys would leak -> only reached when S % 128 == 0 or causal.
+    if Sp != S:
+        assert causal, "non-causal flash path requires S % block == 0"
+        o = o[:, :S]
+    return jnp.moveaxis(o.reshape(B, H, S, hd), 1, 2)
+
+
+def _sdpa_grouped(q: Array, k: Array, v: Array, mask: Optional[Array],
+                  scale: float) -> Array:
+    """GQA-grouped SDPA (no kv repeat) — used for DECODE, where
+    repeating kv heads would multiply the O(B*L) cache reads by the
+    group size G (measured: 19 GB of all-gathers on qwen2.5-3b
+    decode_32k with the flat-H path)."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    logits = jnp.einsum("bskgh,blkh->bkgsl", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        if mask.ndim == 2:
+            m = mask[None, None, None]
+        else:
+            m = mask.reshape((1, 1, 1) + mask.shape[-2:])
+        logits = jnp.where(m, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgsl,blkh->bskgh", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def _act_specs(cfg: ModelConfig):
+    """(qkv_spec, logits_spec) for §Perf head-parallel attention, or
+    (None, None) when activation sharding is off."""
+    if not cfg.shard_activations:
+        return None, None
+    b = tuple(cfg.act_batch_axes) if cfg.act_batch_axes else None
+    if b is not None and len(b) == 1:
+        b = b[0]
+    return (b, None, "model", None), (b, "model", None, None)
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Optional[Array], scale: float,
+          specs=(None, None)) -> Array:
+    """q: (B, S, H, hd); k/v: (B, L, K, hd); H = K * G.
+
+    Flat-H formulation: kv heads are repeated to H before the einsums
+    so every tensor carries the full head axis.  With
+    ``shard_heads=True`` (§Perf hillclimb) the head axis is constrained
+    to the "model" mesh axis — head-parallel attention.  Without it,
+    GSPMD facing a merged-dim-sharded q must split the *contraction*
+    (head_dim) and all-reduce the fp32 (S, L) logits — measured at
+    1.7 TB per device for qwen3-14b prefill_32k (EXPERIMENTS.md §Perf).
+    GQA head counts that do not divide the axis are padded by GSPMD.
+    """
+    qkv_spec, logits_spec = specs
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    if K != H:
+        k = jnp.repeat(k, H // K, axis=2)
+        v = jnp.repeat(v, H // K, axis=2)
+    if qkv_spec is not None:
+        q = _constrain(q, qkv_spec)
+        k = _constrain(k, qkv_spec)
+        v = _constrain(v, qkv_spec)
+    logits = jnp.einsum("bshd,blhd->bhsl", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        # mask comes in as (S, L) or (1,1,1,1,L)-style; normalize to
+        # broadcast over (B, H, S, L)
+        if mask.ndim == 2:
+            m = mask[None, None]
+        else:
+            m = mask.reshape((1, 1) + mask.shape[-2:])
+        logits = jnp.where(m, logits, NEG_INF)
+    if logits_spec is not None:
+        logits = _constrain(logits, logits_spec)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhsl,blhd->bshd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def causal_mask(S: int, L: int, q_offset: int = 0, window: int = 0) -> Array:
+    """(S, L) boolean: query i (absolute pos q_offset+i) may see key j."""
+    qpos = jnp.arange(S)[:, None] + q_offset
+    kpos = jnp.arange(L)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (full sequence) and decode step
+# ---------------------------------------------------------------------------
+
+
+def _positions_default(B: int, S: int, offset: int = 0) -> Array:
+    return jnp.broadcast_to(jnp.arange(S) + offset, (B, S))
+
+
+def gqa_forward(
+    cfg: ModelConfig,
+    p: Params,
+    x: Array,
+    positions: Optional[Array] = None,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    return_kv: bool = False,
+):
+    B, S, d = x.shape
+    hd = cfg.hd
+    q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = dense(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+
+    if cfg.pos_kind == "rope":
+        if cfg.mrope_sections:
+            if positions is None or positions.ndim == 2:
+                base = positions if positions is not None else _positions_default(B, S)
+                positions3 = jnp.broadcast_to(base[None], (3,) + base.shape)
+            else:
+                positions3 = positions
+            q = apply_mrope(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            pos = positions if positions is not None else _positions_default(B, S)
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+
+    if cfg.use_flash and window == 0:
+        y = _flash_sdpa(cfg, q, k, v, causal)
+    else:
+        mask = causal_mask(S, S, 0, window) if causal else None
+        y = _sdpa(q, k, v, mask, 1.0 / jnp.sqrt(hd).astype(jnp.float32),
+                  specs=_act_specs(cfg))
+    out = dense(p["wo"], y.reshape(B, S, cfg.n_heads * hd))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def init_kv_cache(cfg: ModelConfig, B: int, length: int, dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((B, length, cfg.n_kv_heads, cfg.hd), dtype),
+        v=jnp.zeros((B, length, cfg.n_kv_heads, cfg.hd), dtype),
+        slot_pos=-jnp.ones((length,), jnp.int32),
+    )
+
+
+def gqa_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x_t: Array,            # (B, 1, d)
+    pos: Array,            # scalar int32 — absolute position of the new token
+    cache: KVCache,
+    *,
+    window: int = 0,
+) -> Tuple[Array, KVCache]:
+    B, _, d = x_t.shape
+    hd = cfg.hd
+    q = dense(p["wq"], x_t).reshape(B, 1, cfg.n_heads, hd)
+    k = dense(p["wk"], x_t).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x_t).reshape(B, 1, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+
+    posb = jnp.broadcast_to(pos[None], (B, 1)) if pos.ndim == 0 else pos
+    if cfg.pos_kind == "rope":
+        if cfg.mrope_sections:
+            pos3 = jnp.broadcast_to(posb[None], (3, B, 1))
+            q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, posb, cfg.rope_theta)
+            k = apply_rope(k, posb, cfg.rope_theta)
+
+    L = cache.length
+    slot = (pos % L).astype(jnp.int32) if window > 0 else pos.astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+    spos = cache.slot_pos.at[slot].set(pos.astype(jnp.int32))
+
+    valid = (spos >= 0) & (spos <= pos)
+    if window > 0:
+        valid &= spos > pos - window
+    mask = valid[None, None, None, :].reshape(1, 1, 1, -1)   # -> (1,1,1,L)
+
+    # decode is one token: keep the GQA-grouped form (no kv repeat) and
+    # no activation constraints — flat-H/head constraints only help
+    # long-sequence scores and regress single-token decode (measured).
+    y = _sdpa_grouped(q, ck, cv, mask, 1.0 / jnp.sqrt(hd).astype(jnp.float32))
+    out = dense(p["wo"], y.reshape(B, 1, cfg.n_heads * hd))
+    return out, KVCache(k=ck, v=cv, slot_pos=spos)
+
+
+# ---------------------------------------------------------------------------
+# MLA forward / decode
+# ---------------------------------------------------------------------------
+
+
+def _mla_qkv_full(cfg: ModelConfig, p: Params, x: Array, positions: Array):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    nope, rope_d, vd = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+
+    q_lat = rmsnorm(p["q_norm"], dense(p["w_dq"], x), cfg.norm_eps)
+    q = dense(p["w_uq"], q_lat).reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c = rmsnorm(p["kv_norm"], dense(p["w_dkv"], x), cfg.norm_eps)   # (B,S,kv_lora)
+    k_rope = dense(p["w_kr"], x).reshape(B, S, 1, rope_d)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+
+    k_nope = dense(p["w_uk"], c).reshape(B, S, H, nope)
+    v = dense(p["w_uv"], c).reshape(B, S, H, vd)
+    return q_nope, q_rope, k_nope, k_rope, v, c
+
+
+def mla_forward(cfg: ModelConfig, p: Params, x: Array,
+                positions: Optional[Array] = None, *, causal: bool = True,
+                window: int = 0) -> Array:
+    B, S, _ = x.shape
+    pos = positions if positions is not None else _positions_default(B, S)
+    q_nope, q_rope, k_nope, k_rope, v, _ = _mla_qkv_full(cfg, p, x, pos)
+    scale = 1.0 / jnp.sqrt(float(cfg.mla_nope_dim + cfg.mla_rope_dim))
+    logits = (
+        jnp.einsum("bshd,blhd->bhsl", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+        + jnp.einsum("bshd,blxd->bhsl", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
+    ) * scale
+    if causal:
+        m = causal_mask(S, S, 0, window)
+        logits = jnp.where(m[None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    y = jnp.einsum("bhsl,blhd->bshd", w, v.astype(jnp.float32)).astype(x.dtype)
+    return dense(p["wo"], y.reshape(B, S, cfg.n_heads * cfg.mla_v_dim))
+
+
+def init_mla_cache(cfg: ModelConfig, B: int, length: int, dtype) -> MLACache:
+    return MLACache(
+        c=jnp.zeros((B, length, cfg.mla_kv_lora), dtype),
+        k_rope=jnp.zeros((B, length, cfg.mla_rope_dim), dtype),
+        slot_pos=-jnp.ones((length,), jnp.int32),
+    )
+
+
+def mla_decode(cfg: ModelConfig, p: Params, x_t: Array, pos: Array,
+               cache: MLACache, *, window: int = 0,
+               absorbed: bool = True) -> Tuple[Array, MLACache]:
+    """One-token MLA decode against the compressed latent cache.
+
+    absorbed=True uses the matrix-absorption trick: scores are computed
+    directly in latent space via q_nope' = q_nope @ W_uk (per head),
+    and values are combined in latent space before a single W_uv
+    up-projection — O(L * kv_lora) per token instead of
+    O(L * H * (nope + v_dim)) for naive per-token reconstruction.
+    The naive path is kept for oracle testing (absorbed=False).
+    """
+    B, _, d = x_t.shape
+    H = cfg.n_heads
+    nope, rope_d, vd, lora = (cfg.mla_nope_dim, cfg.mla_rope_dim,
+                              cfg.mla_v_dim, cfg.mla_kv_lora)
+    posb = jnp.broadcast_to(pos[None], (B, 1)) if pos.ndim == 0 else pos
+
+    q_lat = rmsnorm(p["q_norm"], dense(p["w_dq"], x_t), cfg.norm_eps)
+    q = dense(p["w_uq"], q_lat).reshape(B, 1, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, posb, cfg.rope_theta)
+
+    c_t = rmsnorm(p["kv_norm"], dense(p["w_dkv"], x_t), cfg.norm_eps)
+    k_rope_t = dense(p["w_kr"], x_t).reshape(B, 1, 1, rope_d)
+    k_rope_t = apply_rope(k_rope_t, posb, cfg.rope_theta).reshape(B, 1, rope_d)
+
+    L = cache.c.shape[1]
+    slot = (pos % L).astype(jnp.int32) if window > 0 else pos.astype(jnp.int32)
+    cc = jax.lax.dynamic_update_slice(cache.c, c_t, (0, slot, 0))
+    ckr = jax.lax.dynamic_update_slice(cache.k_rope, k_rope_t, (0, slot, 0))
+    spos = cache.slot_pos.at[slot].set(pos.astype(jnp.int32))
+
+    valid = (spos >= 0) & (spos <= pos)
+    if window > 0:
+        valid &= spos > pos - window
+
+    scale = 1.0 / jnp.sqrt(float(nope + rope_d))
+    w_uk = p["w_uk"]["w"].reshape(lora, H, nope)
+    if absorbed:
+        # fold W_uk into the query: (B,1,H,nope) x (lora,H,nope) -> (B,H,lora)
+        q_lat_scores = jnp.einsum("bshd,lhd->bhl", q_nope.astype(jnp.float32),
+                                  w_uk.astype(jnp.float32))
+        s_nope = jnp.einsum("bhl,bLl->bhL", q_lat_scores, cc.astype(jnp.float32))
+    else:
+        k_nope_all = jnp.einsum("bLl,lhd->bLhd", cc.astype(jnp.float32),
+                                w_uk.astype(jnp.float32))
+        s_nope = jnp.einsum("bshd,bLhd->bhL", q_nope.astype(jnp.float32), k_nope_all)
+
+    s_rope = jnp.einsum("bshd,bLd->bhL", q_rope.astype(jnp.float32),
+                        ckr.astype(jnp.float32))
+    logits = (s_nope + s_rope) * scale
+    logits = jnp.where(valid[None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)                      # (B,H,L)
+
+    w_uv = p["w_uv"]["w"].reshape(lora, H, vd)
+    if absorbed:
+        ctx_lat = jnp.einsum("bhL,bLl->bhl", w, cc.astype(jnp.float32))   # (B,H,lora)
+        y = jnp.einsum("bhl,lhd->bhd", ctx_lat, w_uv.astype(jnp.float32))
+    else:
+        v_all = jnp.einsum("bLl,lhd->bLhd", cc.astype(jnp.float32),
+                           w_uv.astype(jnp.float32))
+        y = jnp.einsum("bhL,bLhd->bhd", w, v_all)
+    y = y.reshape(B, 1, H * vd).astype(x_t.dtype)
+    return dense(p["wo"], y), MLACache(c=cc, k_rope=ckr, slot_pos=spos)
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_forward(cfg: ModelConfig, p: Params, x: Array,
+                  enc_k: Array, enc_v: Array) -> Array:
+    B, S, d = x.shape
+    hd = cfg.hd
+    q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    if S == 1:   # decode: no constraints / no repeat churn (see gqa_decode)
+        y = _sdpa_grouped(q, enc_k, enc_v, None,
+                          1.0 / jnp.sqrt(hd).astype(jnp.float32))
+    else:
+        y = _sdpa(q, enc_k, enc_v, None,
+                  1.0 / jnp.sqrt(hd).astype(jnp.float32), specs=_act_specs(cfg))
+    return dense(p["wo"], y.reshape(B, S, cfg.n_heads * hd))
+
+
+def cross_precompute(cfg: ModelConfig, p: Params, enc_out: Array):
+    B, L, _ = enc_out.shape
+    hd = cfg.hd
+    k = dense(p["wk"], enc_out).reshape(B, L, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], enc_out).reshape(B, L, cfg.n_kv_heads, hd)
+    return k, v

@@ -1,0 +1,199 @@
+"""Shared neural building blocks (pure functional JAX)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+Params = Dict[str, Array]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def constrain(x: Array, spec) -> Array:
+    """Apply a sharding constraint if tracing under a mesh; no-op on a
+    bare single device (smoke tests / CPU examples)."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_init(kind: str, d: int, dtype) -> Params:
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def norm_apply(kind: str, p: Params, x: Array, eps: float) -> Array:
+    return rmsnorm(p, x, eps) if kind == "rmsnorm" else layernorm(p, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# Dense / embeddings
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False,
+               scale: Optional[float] = None) -> Params:
+    s = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: Array) -> Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p: Params, tokens: Array) -> Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                       # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions3: Array, theta: float,
+                sections: Tuple[int, ...]) -> Array:
+    """Multimodal RoPE (Qwen2-VL): the rotary half-dims are split into
+    (t, h, w) sections, each rotated by its own position stream.
+
+    x: (B, S, H, hd); positions3: (3, B, S); sum(sections) == hd // 2.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    # select which of the 3 position streams drives each frequency slot
+    sel = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=hd // 2
+    )                                                   # (hd/2,) in {0,1,2}
+    pos = jnp.take(positions3, sel, axis=0)             # (hd/2, B, S) -> via take on axis 0
+    pos = jnp.moveaxis(pos, 0, -1)                      # (B, S, hd/2)
+    angles = pos.astype(jnp.float32) * freqs            # (B, S, hd/2)
+    angles = angles[..., None, :]                       # (B, S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq_len: int, d: int, dtype) -> Array:
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angles = pos / (10_000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, d_ff: int, dtype, act: str = "silu_glu") -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "silu_glu":
+        return {
+            "wi": dense_init(k1, d, d_ff, dtype),
+            "wg": dense_init(k2, d, d_ff, dtype),
+            "wo": dense_init(k3, d_ff, d, dtype),
+        }
+    return {
+        "wi": dense_init(k1, d, d_ff, dtype, bias=True),
+        "wo": dense_init(k2, d_ff, d, dtype, bias=True),
+    }
+
+
+def mlp(p: Params, x: Array, act: str = "silu_glu") -> Array:
+    if act == "silu_glu":
+        h = jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x)
+    else:
+        h = jax.nn.gelu(dense(p["wi"], x))
+    return dense(p["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# Conv1d (causal, depthwise) — mamba2 / rglru frontends
+# ---------------------------------------------------------------------------
+
+
+def conv1d_init(key, width: int, channels: int, dtype) -> Params:
+    return {
+        "w": (jax.random.normal(key, (width, channels)) / jnp.sqrt(width)).astype(dtype),
+        "b": jnp.zeros((channels,), dtype),
+    }
+
+
+def causal_conv1d(p: Params, x: Array, left_context: Optional[Array] = None) -> Array:
+    """x: (B, S, C) depthwise causal conv.  ``left_context``: (B, width-1, C)
+    preceding inputs (zeros if None) — enables exact chunked prefill."""
+    width = p["w"].shape[0]
+    if left_context is None:
+        pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([left_context.astype(x.dtype), x], axis=1)
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * p["w"][i] for i in range(width)
+    )
+    return out + p["b"]
+
+
+def conv1d_step(p: Params, buf: Array, x_t: Array) -> Tuple[Array, Array]:
+    """Single decode step.  buf: (B, width-1, C) past inputs."""
+    width = p["w"].shape[0]
+    window = jnp.concatenate([buf, x_t[:, None, :]], axis=1)   # (B, width, C)
+    out = jnp.einsum("bwc,wc->bc", window, p["w"]) + p["b"]
+    return window[:, 1:, :], out

@@ -1,0 +1,98 @@
+"""Unified model API over decoder-only and encoder-decoder families.
+
+    api = build(cfg)
+    params = api.init(key)
+    loss   = api.loss(params, batch)            # train
+    logits, caches = api.prefill(params, batch) # inference prefill
+    logits, caches = api.decode(params, caches, token, pos)
+
+``batch`` is a dict; which keys exist depends on the arch family:
+  text LM:   tokens (B,S), labels (B,S)
+  vlm:       embeds (B,S_img,d) + tokens (B,S_txt) + labels (B,S_txt)
+  audio:     frames (B,F,d) + tokens (B,S) + labels (B,S)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+from .config import ModelConfig
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Array]
+    forward: Callable[..., Any]
+    init_caches: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    if cfg.is_encdec:
+        return _build_encdec(cfg)
+    return _build_decoder_only(cfg)
+
+
+def _build_decoder_only(cfg: ModelConfig) -> ModelAPI:
+    def init(key):
+        return transformer.init_lm(key, cfg)
+
+    def loss(params, batch):
+        return transformer.lm_loss(params, cfg, batch["tokens"],
+                                   batch["labels"], batch.get("embeds"))
+
+    def forward(params, batch):
+        return transformer.forward_lm(params, cfg, batch.get("tokens"),
+                                      batch.get("embeds"))
+
+    def init_caches(B, length, dtype=None):
+        return transformer.init_caches(cfg, B, length, dtype)
+
+    def prefill(params, batch, caches):
+        return transformer.prefill(params, cfg, batch.get("tokens"), caches,
+                                   batch.get("embeds"))
+
+    def decode(params, caches, token, pos):
+        return transformer.decode_step(params, cfg, caches, token, pos)
+
+    return ModelAPI(cfg=cfg, init=init, loss=loss, forward=forward,
+                    init_caches=init_caches, prefill=prefill, decode=decode)
+
+
+def _build_encdec(cfg: ModelConfig) -> ModelAPI:
+    def init(key):
+        return encdec.init_encdec(key, cfg)
+
+    def loss(params, batch):
+        return encdec.encdec_loss(params, cfg, batch["frames"],
+                                  batch["tokens"], batch["labels"])
+
+    def forward(params, batch):
+        enc = encdec.encode(params, cfg, batch["frames"])
+        return encdec.decode_train(params, cfg, batch["tokens"], enc), jnp.zeros((), jnp.float32)
+
+    def init_caches(B, length, dtype=None):
+        return encdec.init_dec_caches(cfg, B, length, dtype)
+
+    def prefill(params, batch, caches):
+        return encdec.prefill_decoder(params, cfg, batch["frames"],
+                                      batch["tokens"], caches)
+
+    def decode(params, caches, token, pos):
+        return encdec.decode_step_encdec(params, cfg, caches, token, pos)
+
+    return ModelAPI(cfg=cfg, init=init, loss=loss, forward=forward,
+                    init_caches=init_caches, prefill=prefill, decode=decode)
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -1,0 +1,285 @@
+"""Mixture-of-Experts block (top-k routing, expert-parallel friendly).
+
+Mesh-TensorFlow-style dense dispatch: tokens are routed to experts via
+one-hot dispatch/combine einsums with a fixed per-expert capacity, so
+all shapes are static and the expert dimension shards cleanly over the
+"model" mesh axis (64/16 = 4 or 32/16 = 2 experts per shard).  Under
+GSPMD the dispatch einsum lowers to an all-to-all over the expert axis
+— exactly the communication pattern expert parallelism requires.
+
+Aux losses: Switch-style load-balance loss + router z-loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import constrain, dense, dense_init
+
+Array = jnp.ndarray
+Params = Dict[str, Array]
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, dff, E = cfg.d_model, cfg.expert_ff, cfg.n_experts
+    kr, ki, kg, ko = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(dff)
+    return {
+        "router": dense_init(kr, d, E, dtype),
+        # stacked expert weights: (E, d, dff) / (E, dff, d)
+        "wi": (jax.random.normal(ki, (E, d, dff)) * s_in).astype(dtype),
+        "wg": (jax.random.normal(kg, (E, d, dff)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(ko, (E, dff, d)) * s_out).astype(dtype),
+    }
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    cap = int(math.ceil(tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(cap, cfg.top_k)
+
+
+def moe_forward_einsum(cfg: ModelConfig, p: Params, x: Array) -> Tuple[Array, Array]:
+    """Mesh-TF-style one-hot dispatch (REFERENCE implementation).
+
+    Cost of the dispatch/combine einsums is O(T * E * C * d), which at
+    32k-token prefill dwarfs the expert FLOPs by >100x (measured in
+    EXPERIMENTS.md §Perf, olmoe x prefill_32k baseline).  Kept as the
+    semantic oracle; production path is the scatter-based
+    ``moe_forward`` below.
+    x: (B, S, d) -> (out, aux_loss)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = dense(p["router"], xt).astype(jnp.float32)        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)             # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)       # renormalize top-k
+
+    C = _capacity(T, cfg)
+    # position of each (token, k) assignment within its expert's capacity
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)     # (T, K, E)
+    flat = onehot.reshape(T * K, E)
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat             # (T*K, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(T, K)  # (T, K)
+    keep = pos < C
+
+    # dispatch tensor: (T, E, C)
+    disp = (
+        jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, 0), C, dtype=jnp.float32)[:, :, None, :]
+        * keep[..., None, None]
+    ).sum(axis=1)                                               # (T, E, C)
+    comb = (
+        jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, 0), C, dtype=jnp.float32)[:, :, None, :]
+        * (gate_vals * keep)[..., None, None]
+    ).sum(axis=1)                                               # (T, E, C)
+
+    xin = jnp.einsum("td,tec->ecd", xt.astype(jnp.float32), disp).astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", xin, p["wi"])
+    eout = jnp.einsum("ecf,efd->ecd", h, p["wo"])               # (E, C, d)
+    out = jnp.einsum("ecd,tec->td", eout.astype(jnp.float32), comb)
+
+    # Switch load-balance loss: E * sum_e f_e * P_e  (see below)
+    assign_frac = jnp.mean(
+        (jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32)), axis=0)
+    router_prob = jnp.mean(probs, axis=0)
+    lb_loss = E * jnp.sum(assign_frac * router_prob)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = cfg.router_aux_coef * (lb_loss + 1e-3 * z_loss)
+
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def moe_forward_dense(cfg: ModelConfig, p: Params, x: Array) -> Tuple[Array, Array]:
+    """Capacity-free MoE: every expert runs on every token; outputs are
+    combined with the (sparse) top-k gates.  Exact (no token dropping),
+    used for decode where T is small and train/decode numerical parity
+    matters.  FLOP cost is E/K times the routed path — a documented
+    hillclimb target (gather-based top-k decode) in EXPERIMENTS.md §Perf.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = dense(p["router"], xt).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    gates = jax.vmap(lambda i, v: jnp.zeros((E,), jnp.float32).at[i].set(v))(
+        expert_idx, gate_vals)                              # (T, E) sparse
+
+    h = jax.nn.silu(jnp.einsum("td,edf->etf", xt, p["wg"])) * jnp.einsum(
+        "td,edf->etf", xt, p["wi"])
+    eout = jnp.einsum("etf,efd->etd", h, p["wo"])           # (E, T, d)
+    out = jnp.einsum("etd,te->td", eout.astype(jnp.float32), gates)
+
+    aux = jnp.zeros((), jnp.float32)
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _router(cfg: ModelConfig, p: Params, xt: Array):
+    logits = dense(p["router"], xt).astype(jnp.float32)        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    return logits, probs, gate_vals, expert_idx
+
+
+def _aux_loss(cfg: ModelConfig, logits, probs, expert_idx):
+    E = cfg.n_experts
+    assign_frac = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    router_prob = jnp.mean(probs, axis=0)
+    lb_loss = E * jnp.sum(assign_frac * router_prob)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return cfg.router_aux_coef * (lb_loss + 1e-3 * z_loss)
+
+
+def moe_forward_scatter(cfg: ModelConfig, p: Params, x: Array) -> Tuple[Array, Array]:
+    """Scatter/gather (sort-free) MoE dispatch (§Perf iterations 1-3).
+
+    §Perf hillclimb change (EXPERIMENTS.md, olmoe x prefill_32k):
+    replaces the O(T*E*C*d) one-hot dispatch/combine einsums of the
+    Mesh-TF formulation with O(T*K*d) scatter into per-expert capacity
+    buffers and gather back.  Identical routing semantics (same top-k,
+    same renormalized gates, same position-in-expert capacity dropping)
+    — tests assert exact parity with ``moe_forward_einsum``.
+
+    Under GSPMD the scatter into the (E, C, d) expert-sharded buffer
+    lowers to the expert-parallel all-to-all.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits, probs, gate_vals, expert_idx = _router(cfg, p, xt)
+
+    C = _capacity(T, cfg)
+    flat_expert = expert_idx.reshape(T * K)
+    # position of each (token, k) assignment within its expert, in
+    # flattened (t, k)-major order — identical semantics to the einsum
+    # reference's cumsum, but via a stable argsort: §Perf iteration 2
+    # found XLA lowers an (T*K, E) cumsum to a quadratic reduce-window
+    # (2.8e14 flops per block at 32k-token prefill).  Sort-based rank
+    # is O(n log n).
+    order = jnp.argsort(flat_expert, stable=True)               # (T*K,)
+    sorted_e = flat_expert[order]
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_sorted = jnp.arange(T * K) - group_start[sorted_e]
+    pos = jnp.zeros((T * K,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))
+    keep = pos < C
+    dest = jnp.where(keep, flat_expert * C + pos, E * C)        # sentinel row
+
+    # dispatch: scatter token activations into expert buffers.
+    # (§Perf iteration 3 tried pinning buf/eout to expert-sharded specs;
+    # REFUTED: GSPMD replicates data-dependent scatters and added a
+    # 1.2 TB all-reduce.  The GSPMD-friendly layout is left to the
+    # shard_map expert-parallel path; see EXPERIMENTS.md §Perf.)
+    tok_of = jnp.repeat(jnp.arange(T), K)                       # (T*K,)
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    buf = buf.at[dest].set(xt[tok_of])
+    xin = buf[: E * C].reshape(E, C, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", xin, p["wi"])
+    eout = jnp.einsum("ecf,efd->ecd", h, p["wo"])               # (E, C, d)
+
+    # combine: gather expert outputs back to (T*K, d), weight, sum over K
+    flat_out = jnp.concatenate(
+        [eout.reshape(E * C, d), jnp.zeros((1, d), eout.dtype)], axis=0)
+    per_assign = flat_out[dest]                                 # (T*K, d)
+    w = (gate_vals.reshape(T * K) * keep).astype(jnp.float32)
+    out = jnp.sum(
+        (per_assign.astype(jnp.float32) * w[:, None]).reshape(T, K, d), axis=1)
+
+    aux = _aux_loss(cfg, logits, probs, expert_idx)
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _positions_by_argsort(flat_expert: Array, E: int) -> Array:
+    """Rank of each assignment within its expert (stable, flat order)."""
+    n = flat_expert.shape[0]
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_e = flat_expert[order]
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_sorted = jnp.arange(n) - group_start[sorted_e]
+    return jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+
+
+def moe_forward(cfg: ModelConfig, p: Params, x: Array) -> Tuple[Array, Array]:
+    """Grouped einsum dispatch — the production path (§Perf iteration 4).
+
+    Tokens are split into groups of ``moe_group_size`` with a per-group
+    capacity C_g = ceil(G*K/E * capacity_factor).  Dispatch/combine are
+    one-hot einsums like the Mesh-TF reference, but the cost
+    T*E*C_g*d is ~4000x smaller than the global-capacity version
+    (C_g = 40 vs C = 164k at 32k-token prefill), and — unlike the
+    scatter formulation of iterations 1-3 — GSPMD reshards einsum
+    outputs with a clean expert-parallel all-to-all instead of
+    replicating buffers.  Positions use the argsort rank (iteration 2).
+
+    Capacity is enforced PER GROUP (standard practice; groups align
+    with the data sharding so dropping decisions are shard-local).
+    With moe_group_size >= T this is exactly the einsum reference.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = min(cfg.moe_group_size, T)
+    if T % G != 0:           # pad tokens to a group multiple
+        pad = G - T % G
+        xt = jnp.concatenate(
+            [x.reshape(T, d), jnp.zeros((pad, d), x.dtype)], axis=0)
+    else:
+        pad = 0
+        xt = x.reshape(T, d)
+    Tp = T + pad
+    g = Tp // G
+
+    logits, probs, gate_vals, expert_idx = _router(cfg, p, xt)
+    if pad:
+        # padded tokens get zero gates (their expert choice is irrelevant)
+        gate_vals = gate_vals * (jnp.arange(Tp) < T)[:, None]
+
+    Cg = max(int(math.ceil(G * K / E * cfg.capacity_factor)), K)
+    ei_g = expert_idx.reshape(g, G * K)                          # per group
+    pos = jax.vmap(lambda fe: _positions_by_argsort(fe, E))(ei_g)
+    pos = pos.reshape(g, G, K)
+    keep = pos < Cg
+    ei = expert_idx.reshape(g, G, K)
+    gv = gate_vals.reshape(g, G, K)
+
+    # (g, G, E, Cg) one-hot dispatch / combine
+    e_oh = jax.nn.one_hot(ei, E, dtype=x.dtype)                  # (g,G,K,E)
+    c_oh = jax.nn.one_hot(jnp.where(keep, pos, 0), Cg, dtype=x.dtype)
+    disp = jnp.einsum("gtke,gtkc->gtec",
+                      e_oh * keep[..., None], c_oh)              # (g,G,E,Cg)
+    comb = jnp.einsum("gtke,gtkc->gtec",
+                      e_oh * (gv * keep).astype(x.dtype)[..., None], c_oh)
+
+    xg = xt.reshape(g, G, d)
+    xin = jnp.einsum("gtd,gtec->gecd", xg, disp)                 # (g,E,Cg,d)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, p["wg"])) * jnp.einsum(
+        "gecd,edf->gecf", xin, p["wi"])
+    eout = jnp.einsum("gecf,efd->gecd", h, p["wo"])              # (g,E,Cg,d)
+    out = jnp.einsum("gecd,gtec->gtd", eout, comb)
+
+    out = out.reshape(Tp, d)[:T]
+    aux = _aux_loss(cfg, logits, probs, expert_idx)
+    return out.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: two branches from the residual stream —
+  gate branch:      y = gelu(W_y x)
+  recurrent branch: u = W_x x -> causal conv1d(4) -> RG-LRU -> h
+output: W_o (h * y).
+
+RG-LRU recurrence (per channel):
+  r_t = sigmoid(W_a u_t + b_a)              recurrence gate
+  i_t = sigmoid(W_i u_t + b_i)              input gate
+  log_a_t = -c * softplus(Lambda) * r_t     (c = 8)
+  a_t = exp(log_a_t)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training/prefill evaluate the linear recurrence with
+``jax.lax.associative_scan`` — O(log S) depth, maps well onto the TPU
+vector units (this is the TPU-native replacement for the paper-family's
+custom CUDA linear-scan kernel).  Decode is the O(1) step; the "cache"
+for long_500k is the fixed-size hidden state + conv buffer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import causal_conv1d, conv1d_init, conv1d_step, dense, dense_init
+
+Array = jnp.ndarray
+Params = Dict[str, Array]
+
+_C = 8.0
+
+
+class LRUState(NamedTuple):
+    h: Array          # (B, W) hidden state
+    conv_buf: Array   # (B, conv_width-1, W)
+
+
+def rglru_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, W = cfg.d_model, cfg.lru_dim
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # Lambda init so a ~ U[0.9, 0.999] at r=1 (griffin init)
+    u = jax.random.uniform(k6, (W,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))      # softplus^-1(-log(u)/c)
+    return {
+        "w_y": dense_init(k1, d, W, dtype),
+        "w_x": dense_init(k2, d, W, dtype),
+        "conv": conv1d_init(k3, cfg.conv_width, W, dtype),
+        "w_a": dense_init(k4, W, W, dtype, bias=True),
+        "w_i": dense_init(k5, W, W, dtype, bias=True),
+        "Lambda": lam.astype(jnp.float32),
+        "w_o": dense_init(jax.random.fold_in(key, 7), W, d, dtype),
+    }
+
+
+def _gates(p: Params, u: Array):
+    r = jax.nn.sigmoid(dense(p["w_a"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["w_i"], u).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["Lambda"]) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_forward(cfg: ModelConfig, p: Params, x: Array,
+                  state: "LRUState | None" = None) -> Tuple[Array, "LRUState"]:
+    """x: (B, S, d) -> (out, new_state)."""
+    B, S, d = x.shape
+    y = jax.nn.gelu(dense(p["w_y"], x))
+    ux = dense(p["w_x"], x)
+    if state is None:
+        state = init_lru_state(cfg, B, x.dtype)
+    u = causal_conv1d(p["conv"], ux, left_context=state.conv_buf)
+    tail_src = jnp.concatenate([state.conv_buf, ux], axis=1)
+    new_buf = tail_src[:, -(cfg.conv_width - 1):, :]
+
+    a, b = _gates(p, u)                        # (B, S, W) fp32
+    # fold the initial state into the first step: b_1 += a_1 * h0
+    b = b.at[:, 0, :].add(a[:, 0, :] * state.h)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_final = h[:, -1, :]
+    out = dense(p["w_o"], (h * y.astype(jnp.float32)).astype(x.dtype))
+    return out, LRUState(h=h_final, conv_buf=new_buf)
+
+
+def init_lru_state(cfg: ModelConfig, B: int, dtype) -> LRUState:
+    return LRUState(
+        h=jnp.zeros((B, cfg.lru_dim), jnp.float32),
+        conv_buf=jnp.zeros((B, cfg.conv_width - 1, cfg.lru_dim), dtype),
+    )
+
+
+def rglru_decode(cfg: ModelConfig, p: Params, x_t: Array,
+                 state: LRUState) -> Tuple[Array, LRUState]:
+    """x_t: (B, 1, d) single-token step."""
+    B = x_t.shape[0]
+    y = jax.nn.gelu(dense(p["w_y"], x_t[:, 0, :]))
+    ux = dense(p["w_x"], x_t[:, 0, :])
+    buf, u = conv1d_step(p["conv"], state.conv_buf, ux)
+
+    a, b = _gates(p, u)                        # (B, W)
+    h = a * state.h + b
+    out = dense(p["w_o"], (h * y.astype(jnp.float32)).astype(x_t.dtype))
+    return out[:, None, :], LRUState(h=h, conv_buf=buf)

@@ -1,0 +1,218 @@
+"""Mamba-2 block with the SSD (state-space duality) algorithm.
+
+Training/prefill use the **chunked SSD** form (arXiv:2405.21060): the
+sequence is split into chunks of length Q; within a chunk the output is
+a small attention-like matmul (MXU-friendly), across chunks a recurrent
+state of shape (heads, head_dim, d_state) is carried by a short
+lax.scan.  This is the TPU-native adaptation: the original CUDA kernel
+fuses the intra-chunk quadratic part per SM; here each chunk's
+(Q x Q) masked-decay matmul and its (Q x N) state projections map onto
+the MXU, and the cross-chunk scan has length S/Q.
+
+Decoding is the O(1) recurrent step — the reason long_500k is natural
+for SSMs: the "cache" is the fixed-size state, independent of context
+length.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import causal_conv1d, conv1d_init, conv1d_step, dense, dense_init, rmsnorm
+
+Array = jnp.ndarray
+Params = Dict[str, Array]
+
+
+class SSMState(NamedTuple):
+    h: Array          # (B, H, hd, N) recurrent state
+    conv_buf: Array   # (B, conv_width-1, din + 2*G*N)
+
+
+def ssm_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    din = cfg.d_inner
+    H = cfg.ssm_heads
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = din + 2 * G * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(k1, d, 2 * din + 2 * G * N + H, dtype),
+        "conv": conv1d_init(k2, cfg.ssm_conv, conv_ch, dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_norm": {"scale": jnp.ones((din,), dtype)},
+        "out_proj": dense_init(k3, din, d, dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: Array):
+    din = cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z, xc, Bm, Cm, dt = jnp.split(
+        proj, [din, 2 * din, 2 * din + G * N, 2 * din + 2 * G * N], axis=-1
+    )
+    return z, xc, Bm, Cm, dt
+
+
+def _ssd_chunked(cfg: ModelConfig, x: Array, Bm: Array, Cm: Array,
+                 dt: Array, A_log: Array, h0: Array):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   per-head inputs (P = head_dim)
+    Bm: (B, S, G, N)   input projections (G groups broadcast over heads)
+    Cm: (B, S, G, N)   output projections
+    dt: (B, S, H)      positive step sizes
+    h0: (B, H, P, N)   initial state
+    Returns (y: (B, S, H, P), h_final).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    rep = H // G
+
+    a = -jnp.exp(A_log)                                   # (H,) negative
+    # reshape to chunks
+    xq = x.reshape(Bsz, nc, Q, H, P)
+    Bq = jnp.repeat(Bm.reshape(Bsz, nc, Q, G, N), rep, axis=3)   # (B,nc,Q,H,N)
+    Cq = jnp.repeat(Cm.reshape(Bsz, nc, Q, G, N), rep, axis=3)
+    dtq = dt.reshape(Bsz, nc, Q, H)
+    l = dtq * a                                           # (B,nc,Q,H) log-decays
+    cum = jnp.cumsum(l, axis=2)                           # inclusive cumsum
+
+    # intra-chunk: M[t,s] = (C_t . B_s) * exp(cum_t - cum_s) * dt_s, s <= t
+    # (B,nc,H,Q,Q)
+    CB = jnp.einsum("bnqhx,bnshx->bnhqs", Cq, Bq)
+    diff = (cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
+            - cum[:, :, :, None, :].transpose(0, 1, 4, 3, 2))
+    # diff[b,n,h,t,s] = cum_t - cum_s; for masked s > t this is >= 0 and
+    # exp() can overflow -> masking AFTER exp leaks NaN through the
+    # gradient.  Mask the exponent itself instead (exp(-inf) = 0).
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.exp(jnp.where(tri[None, None, None], diff, -jnp.inf))
+    M = CB * decay
+    y_intra = jnp.einsum("bnhqs,bnshp,bnsh->bnqhp", M, xq, dtq)
+
+    # chunk summaries
+    # state injected by chunk n: sum_s exp(cum_Q - cum_s) dt_s B_s (x) x_s
+    end_decay = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bnqh,bnqh,bnqhx,bnqhp->bnhpx",
+                             end_decay, dtq, Bq, xq)      # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,nc,H) total decay
+
+    # inter-chunk recurrence over nc chunks
+    def scan_fn(h, inp):
+        cs, cd = inp                                      # (B,H,P,N), (B,H)
+        h_out = h                                         # state BEFORE this chunk
+        h_next = cd[:, :, None, None] * h + cs
+        return h_next, h_out
+
+    cs_seq = jnp.moveaxis(chunk_state, 1, 0)              # (nc,B,H,P,N)
+    cd_seq = jnp.moveaxis(chunk_decay, 1, 0)              # (nc,B,H)
+    h_final, h_prevs = jax.lax.scan(scan_fn, h0, (cs_seq, cd_seq))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y_t += C_t . (exp(cum_t) * h_prev)
+    in_decay = jnp.exp(cum)                               # (B,nc,Q,H)
+    y_inter = jnp.einsum("bnqhx,bnhpx,bnqh->bnqhp", Cq, h_prevs, in_decay)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def ssm_forward(cfg: ModelConfig, p: Params, x: Array,
+                state: "SSMState | None" = None) -> Tuple[Array, "SSMState"]:
+    """Full-sequence Mamba-2 block.  x: (B, S, d) -> (y, new_state).
+
+    ``state`` carries the recurrent state and the causal-conv left
+    context, so chunked prefill / prefill->decode handoff is exact.
+    """
+    Bsz, S, d = x.shape
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+
+    proj = dense(p["in_proj"], x)
+    z, xc, Bm, Cm, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    if state is None:
+        state = init_ssm_state(cfg, Bsz, x.dtype)
+    conv_out = jax.nn.silu(
+        causal_conv1d(p["conv"], conv_in, left_context=state.conv_buf))
+    conv_tail_src = jnp.concatenate([state.conv_buf, conv_in], axis=1)
+    new_conv_buf = conv_tail_src[:, -(cfg.ssm_conv - 1):, :]
+    xc, Bm, Cm = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xc.reshape(Bsz, S, H, P).astype(jnp.float32)
+    Bm = Bm.reshape(Bsz, S, G, N).astype(jnp.float32)
+    Cm = Cm.reshape(Bsz, S, G, N).astype(jnp.float32)
+
+    # pad the time axis to a chunk multiple: padded steps carry dt=0,
+    # i.e. decay exp(0)=1 and zero state contribution — exact.
+    Q = min(cfg.ssm_chunk, S) if S % min(cfg.ssm_chunk, S) == 0 else cfg.ssm_chunk
+    Sp = ((S + Q - 1) // Q) * Q
+    if Sp != S:
+        padt = ((0, 0), (0, Sp - S))
+        xh_p = jnp.pad(xh, padt + ((0, 0), (0, 0)))
+        Bm_p = jnp.pad(Bm, padt + ((0, 0), (0, 0)))
+        Cm_p = jnp.pad(Cm, padt + ((0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, padt + ((0, 0),))
+    else:
+        xh_p, Bm_p, Cm_p, dt_p = xh, Bm, Cm, dt
+    y, h_final = _ssd_chunked(cfg, xh_p, Bm_p, Cm_p, dt_p, p["A_log"], state.h)
+    y = y[:, :S]
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(Bsz, S, cfg.d_inner).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    return dense(p["out_proj"], y), SSMState(h=h_final, conv_buf=new_conv_buf)
+
+
+def init_ssm_state(cfg: ModelConfig, B: int, dtype) -> SSMState:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return SSMState(
+        h=jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        conv_buf=jnp.zeros((B, cfg.ssm_conv - 1, conv_ch), dtype),
+    )
+
+
+def ssm_decode(cfg: ModelConfig, p: Params, x_t: Array,
+               state: SSMState) -> Tuple[Array, SSMState]:
+    """O(1) recurrent decode step.  x_t: (B, 1, d)."""
+    Bsz = x_t.shape[0]
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+
+    proj = dense(p["in_proj"], x_t[:, 0, :])
+    z, xc, Bm, Cm, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    buf, conv_out = conv1d_step(p["conv"], state.conv_buf, conv_in)
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bm, Cm = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)                                          # (B,H)
+
+    xh = xc.reshape(Bsz, H, P).astype(jnp.float32)
+    Bmh = jnp.repeat(Bm.reshape(Bsz, G, N), H // G, axis=1)          # (B,H,N)
+    Cmh = jnp.repeat(Cm.reshape(Bsz, G, N), H // G, axis=1)
+
+    h = decay[:, :, None, None] * state.h + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, Bmh, xh)
+    y = jnp.einsum("bhn,bhpn->bhp", Cmh, h) + p["D"][None, :, None] * xh
+    y = y.reshape(Bsz, 1, cfg.d_inner).astype(x_t.dtype)
+
+    y = y * jax.nn.silu(z[:, None, :])
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    return dense(p["out_proj"], y), SSMState(h=h, conv_buf=buf)

@@ -1,0 +1,394 @@
+"""Decoder-only LM assembly covering dense / MoE / SSM / hybrid / VLM.
+
+Layers are organized into **stages**: each stage is a ``lax.scan`` over
+``repeats`` copies of a pattern *unit* (one block for uniform archs;
+("rglru","rglru","attn") for recurrentgemma).  Scanning keeps the HLO
+size O(unit) instead of O(depth) — essential for the 40-combination
+dry-run compile matrix.
+
+Three entry points per model:
+  forward_lm   — full-sequence logits (+ MoE aux loss)    [train]
+  prefill      — full-sequence forward that also fills per-layer caches
+  decode_step  — one token against the caches             [serve]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from .layers import dense, dense_init, embed, embed_init, mlp, mlp_init, norm_apply, norm_init
+
+Array = jnp.ndarray
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block init / forward / decode
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ModelConfig, kind: str) -> Params:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind == "attn":
+        return {
+            "norm1": norm_init(cfg.norm_kind, d, dt),
+            "attn": attn.attn_init(k1, cfg, dt),
+            "norm2": norm_init(cfg.norm_kind, d, dt),
+            "mlp": mlp_init(k2, d, cfg.d_ff, dt, cfg.act),
+        }
+    if kind == "moe":
+        return {
+            "norm1": norm_init(cfg.norm_kind, d, dt),
+            "attn": attn.attn_init(k1, cfg, dt),
+            "norm2": norm_init(cfg.norm_kind, d, dt),
+            "moe": moe_mod.moe_init(k2, cfg, dt),
+        }
+    if kind == "ssm":
+        return {
+            "norm1": norm_init(cfg.norm_kind, d, dt),
+            "ssm": ssm_mod.ssm_init(k1, cfg, dt),
+        }
+    if kind == "rglru":
+        return {
+            "norm1": norm_init(cfg.norm_kind, d, dt),
+            "rglru": rglru_mod.rglru_init(k1, cfg, dt),
+            "norm2": norm_init(cfg.norm_kind, d, dt),
+            "mlp": mlp_init(k2, d, cfg.d_ff, dt, cfg.act),
+        }
+    raise ValueError(kind)
+
+
+def _attn_window(cfg: ModelConfig) -> int:
+    return cfg.window
+
+
+def block_forward(cfg: ModelConfig, kind: str, p: Params, x: Array,
+                  positions: Optional[Array]) -> Tuple[Array, Array]:
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    eps = cfg.norm_eps
+    if kind in ("attn", "moe"):
+        h = norm_apply(cfg.norm_kind, p["norm1"], x, eps)
+        if cfg.attn_kind == "mla":
+            a = attn.mla_forward(cfg, p["attn"], h, positions,
+                                 window=_attn_window(cfg))
+        else:
+            a = attn.gqa_forward(cfg, p["attn"], h, positions,
+                                 window=_attn_window(cfg))
+        x = x + a
+        h = norm_apply(cfg.norm_kind, p["norm2"], x, eps)
+        if kind == "attn":
+            x = x + mlp(p["mlp"], h, cfg.act)
+        else:
+            mo, aux = moe_mod.moe_forward(cfg, p["moe"], h)
+            x = x + mo
+        return x, aux
+    if kind == "ssm":
+        h = norm_apply(cfg.norm_kind, p["norm1"], x, eps)
+        y, _ = ssm_mod.ssm_forward(cfg, p["ssm"], h)
+        return x + y, aux
+    if kind == "rglru":
+        h = norm_apply(cfg.norm_kind, p["norm1"], x, eps)
+        y, _ = rglru_mod.rglru_forward(cfg, p["rglru"], h)
+        x = x + y
+        h = norm_apply(cfg.norm_kind, p["norm2"], x, eps)
+        return x + mlp(p["mlp"], h, cfg.act), aux
+    raise ValueError(kind)
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, B: int, length: int, dtype):
+    if kind in ("attn", "moe"):
+        L = min(length, cfg.window) if cfg.window > 0 else length
+        if cfg.attn_kind == "mla":
+            return attn.init_mla_cache(cfg, B, L, dtype)
+        return attn.init_kv_cache(cfg, B, L, dtype)
+    if kind == "ssm":
+        return ssm_mod.init_ssm_state(cfg, B, dtype)
+    if kind == "rglru":
+        return rglru_mod.init_lru_state(cfg, B, dtype)
+    raise ValueError(kind)
+
+
+def block_prefill(cfg: ModelConfig, kind: str, p: Params, cache, x: Array,
+                  positions: Optional[Array]) -> Tuple[Array, Any, Array]:
+    """Full-sequence forward that also fills this block's cache.
+    Returns (x, cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    eps = cfg.norm_eps
+    B, S, _ = x.shape
+    if kind in ("attn", "moe"):
+        h = norm_apply(cfg.norm_kind, p["norm1"], x, eps)
+        if cfg.attn_kind == "mla":
+            a, new_cache = _mla_prefill(cfg, p["attn"], h, positions, cache)
+        else:
+            a, kv = attn.gqa_forward(cfg, p["attn"], h, positions,
+                                     window=_attn_window(cfg), return_kv=True)
+            new_cache = _fill_kv_cache(cfg, cache, kv, S)
+        x = x + a
+        h = norm_apply(cfg.norm_kind, p["norm2"], x, eps)
+        if kind == "attn":
+            x = x + mlp(p["mlp"], h, cfg.act)
+        else:
+            mo, aux = moe_mod.moe_forward(cfg, p["moe"], h)
+            x = x + mo
+        return x, new_cache, aux
+    if kind == "ssm":
+        h = norm_apply(cfg.norm_kind, p["norm1"], x, eps)
+        y, new_state = ssm_mod.ssm_forward(cfg, p["ssm"], h, cache)
+        return x + y, new_state, aux
+    if kind == "rglru":
+        h = norm_apply(cfg.norm_kind, p["norm1"], x, eps)
+        y, new_state = rglru_mod.rglru_forward(cfg, p["rglru"], h, cache)
+        x = x + y
+        h = norm_apply(cfg.norm_kind, p["norm2"], x, eps)
+        return x + mlp(p["mlp"], h, cfg.act), new_state, aux
+    raise ValueError(kind)
+
+
+def _fill_kv_cache(cfg: ModelConfig, cache: attn.KVCache, kv, S: int) -> attn.KVCache:
+    k, v = kv                                  # (B, S, K, hd)
+    L = cache.length
+    if cfg.window > 0 and S > L:
+        # ring layout: token position p lives at slot p % L
+        take = k[:, S - L:], v[:, S - L:]
+        pos = jnp.arange(S - L, S, dtype=jnp.int32)
+        slots = pos % L
+        order = jnp.argsort(slots)
+        ck = cache.k.at[:, slots[order]].set(take[0][:, order])
+        cv = cache.v.at[:, slots[order]].set(take[1][:, order])
+        spos = cache.slot_pos.at[slots[order]].set(pos[order])
+        return attn.KVCache(k=ck, v=cv, slot_pos=spos)
+    ck = lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+    cv = lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
+    pos = jnp.arange(L, dtype=jnp.int32)
+    spos = jnp.where(pos < S, pos, -1)
+    return attn.KVCache(k=ck, v=cv, slot_pos=spos)
+
+
+def _mla_prefill(cfg: ModelConfig, p: Params, h: Array, positions, cache):
+    B, S, _ = h.shape
+    pos = positions if positions is not None else attn._positions_default(B, S)
+    a = attn.mla_forward(cfg, p, h, pos, window=_attn_window(cfg))
+    # recompute the latent stream for the cache (cheap projections)
+    from .layers import rmsnorm
+    c = rmsnorm(p["kv_norm"], dense(p["w_dkv"], h), cfg.norm_eps)
+    k_rope = dense(p["w_kr"], h).reshape(B, S, 1, cfg.mla_rope_dim)
+    from .layers import apply_rope
+    k_rope = apply_rope(k_rope, pos, cfg.rope_theta).reshape(B, S, cfg.mla_rope_dim)
+    L = cache.c.shape[1]
+    cc = lax.dynamic_update_slice(cache.c, c.astype(cache.c.dtype), (0, 0, 0))
+    ckr = lax.dynamic_update_slice(cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, 0, 0))
+    posL = jnp.arange(L, dtype=jnp.int32)
+    spos = jnp.where(posL < S, posL, -1)
+    return a, attn.MLACache(c=cc, k_rope=ckr, slot_pos=spos)
+
+
+def block_decode(cfg: ModelConfig, kind: str, p: Params, cache, x_t: Array,
+                 pos: Array) -> Tuple[Array, Any]:
+    eps = cfg.norm_eps
+    if kind in ("attn", "moe"):
+        h = norm_apply(cfg.norm_kind, p["norm1"], x_t, eps)
+        if cfg.attn_kind == "mla":
+            a, new_cache = attn.mla_decode(cfg, p["attn"], h, pos, cache,
+                                           window=_attn_window(cfg))
+        else:
+            a, new_cache = attn.gqa_decode(cfg, p["attn"], h, pos, cache,
+                                           window=_attn_window(cfg))
+        x_t = x_t + a
+        h = norm_apply(cfg.norm_kind, p["norm2"], x_t, eps)
+        if kind == "attn":
+            x_t = x_t + mlp(p["mlp"], h, cfg.act)
+        else:
+            mo, _ = moe_mod.moe_forward_dense(cfg, p["moe"], h)
+            x_t = x_t + mo
+        return x_t, new_cache
+    if kind == "ssm":
+        h = norm_apply(cfg.norm_kind, p["norm1"], x_t, eps)
+        y, new_state = ssm_mod.ssm_decode(cfg, p["ssm"], h, cache)
+        return x_t + y, new_state
+    if kind == "rglru":
+        h = norm_apply(cfg.norm_kind, p["norm1"], x_t, eps)
+        y, new_state = rglru_mod.rglru_decode(cfg, p["rglru"], h, cache)
+        x_t = x_t + y
+        h = norm_apply(cfg.norm_kind, p["norm2"], x_t, eps)
+        return x_t + mlp(p["mlp"], h, cfg.act), new_state
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    ke, kh, ks = jax.random.split(key, 3)
+    params: Params = {
+        "embed": embed_init(ke, cfg.padded_vocab, cfg.d_model, dt),
+        "final_norm": norm_init(cfg.norm_kind, cfg.d_model, dt),
+        "stages": [],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kh, cfg.d_model, cfg.padded_vocab, dt)
+
+    for si, (unit, repeats) in enumerate(cfg.stages):
+        def init_unit(k):
+            ks = jax.random.split(k, len(unit))
+            return {f"b{j}": block_init(ks[j], cfg, kind)
+                    for j, kind in enumerate(unit)}
+        keys = jax.random.split(jax.random.fold_in(ks, si), repeats)
+        params["stages"].append(jax.vmap(init_unit)(keys))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens: Optional[Array],
+                  embeds: Optional[Array]) -> Array:
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(_dtype(cfg)))
+    if tokens is not None:
+        parts.append(embed(params["embed"], tokens))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+
+
+def forward_lm(params: Params, cfg: ModelConfig, tokens: Optional[Array],
+               embeds: Optional[Array] = None,
+               positions: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Returns (logits over padded_vocab, aux_loss)."""
+    x = _embed_inputs(params, cfg, tokens, embeds)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for (unit, repeats), stage_p in zip(cfg.stages, params["stages"]):
+        def body(carry, unit_p):
+            x, aux = carry
+            for j, kind in enumerate(unit):
+                x, a = block_forward(cfg, kind, unit_p[f"b{j}"], x, positions)
+                aux = aux + a
+            return (x, aux), None
+        if cfg.remat:
+            if cfg.remat_policy == "dots":
+                body = jax.checkpoint(
+                    body,
+                    policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            else:
+                body = jax.checkpoint(body)
+        (x, aux_total), _ = lax.scan(body, (x, aux_total), stage_p,
+                                     unroll=repeats if cfg.unroll_scan else 1)
+
+    x = norm_apply(cfg.norm_kind, params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = dense(params["lm_head"], x)
+    return logits, aux_total
+
+
+def lm_loss(params: Params, cfg: ModelConfig, tokens: Array, labels: Array,
+            embeds: Optional[Array] = None) -> Array:
+    """Cross-entropy over the true vocab (padded columns masked), mean
+    per token; MoE aux added.  With embeds (VLM/audio prefix), loss is
+    computed only on the trailing token positions."""
+    logits, aux = forward_lm(params, cfg, tokens, embeds)
+    if embeds is not None:
+        logits = logits[:, -labels.shape[1]:, :]
+    # §Perf: mask padded vocab columns with an ADDITIVE bias fused into
+    # the fp32 upcast (one full-size intermediate instead of two).
+    pad_bias = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, 0.0, -1e30)
+    logits = logits.astype(jnp.float32) + pad_bias
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold) + aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, B: int, length: int, dtype=None):
+    """Stacked per-stage caches matching params['stages'] structure."""
+    dt = dtype or _dtype(cfg)
+    caches = []
+    for unit, repeats in cfg.stages:
+        one = {f"b{j}": block_cache_init(cfg, kind, B, length, dt)
+               for j, kind in enumerate(unit)}
+        caches.append(jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (repeats,) + l.shape).copy() if hasattr(l, "shape") else l,
+            one))
+    return caches
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: Optional[Array],
+            caches, embeds: Optional[Array] = None,
+            positions: Optional[Array] = None):
+    """Full-sequence forward filling the caches.  Returns
+    (last-token logits, new_caches)."""
+    x = _embed_inputs(params, cfg, tokens, embeds)
+
+    new_caches = []
+    for (unit, repeats), stage_p, stage_c in zip(cfg.stages, params["stages"], caches):
+        def body(x, scanned):
+            unit_p, unit_c = scanned
+            new_c = {}
+            for j, kind in enumerate(unit):
+                x, nc, _ = block_prefill(cfg, kind, unit_p[f"b{j}"],
+                                         unit_c[f"b{j}"], x, positions)
+                new_c[f"b{j}"] = nc
+            return x, new_c
+        x, nc = lax.scan(body, x, (stage_p, stage_c),
+                         unroll=repeats if cfg.unroll_scan else 1)
+        new_caches.append(nc)
+
+    x = norm_apply(cfg.norm_kind, params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = dense(params["lm_head"], x)
+    return logits, new_caches
+
+
+def decode_step(params: Params, cfg: ModelConfig, caches, token: Array,
+                pos: Array):
+    """token: (B, 1) int32; pos: scalar int32 absolute position.
+    Returns (logits (B, 1, V), new_caches)."""
+    x = embed(params["embed"], token)
+
+    new_caches = []
+    for (unit, repeats), stage_p, stage_c in zip(cfg.stages, params["stages"], caches):
+        def body(x, scanned):
+            unit_p, unit_c = scanned
+            new_c = {}
+            for j, kind in enumerate(unit):
+                x, nc = block_decode(cfg, kind, unit_p[f"b{j}"],
+                                     unit_c[f"b{j}"], x, pos)
+                new_c[f"b{j}"] = nc
+            return x, new_c
+        x, nc = lax.scan(body, x, (stage_p, stage_c),
+                         unroll=repeats if cfg.unroll_scan else 1)
+        new_caches.append(nc)
+
+    x = norm_apply(cfg.norm_kind, params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = dense(params["lm_head"], x)
+    return logits, new_caches

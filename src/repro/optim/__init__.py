@@ -1,0 +1,3 @@
+from .optimizers import Optimizer, OptimizerConfig, make
+
+__all__ = ["Optimizer", "OptimizerConfig", "make"]

@@ -1,0 +1,96 @@
+"""Optimizers (functional, pytree-based; no optax dependency).
+
+``sgd`` (plain / momentum) is the theory-relevant optimizer: its update
+is loss-proportional in the paper's sense (Cor. 8), so the dynamic
+protocol's guarantees apply.  ``adamw`` is provided for practical LM
+training; its update is only approximately loss-proportional (the
+epsilon machinery of Lemma 3 covers bounded deviations), which we note
+in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "sgd"          # sgd | adamw
+    lr: float = 1e-2
+    momentum: float = 0.0
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0     # 0 = off
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray], Tuple[PyTree, PyTree]]
+    # update(grads, opt_state, params, step) -> (new_params, new_state)
+
+
+def _clip(grads: PyTree, max_norm: float) -> PyTree:
+    if max_norm <= 0:
+        return grads
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def make(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.kind == "sgd":
+        def init(params):
+            if cfg.momentum == 0.0:
+                return ()
+            return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+        def update(grads, state, params, step):
+            grads = _clip(grads, cfg.grad_clip)
+            if cfg.momentum == 0.0:
+                new_params = jax.tree.map(
+                    lambda p, g: (p.astype(jnp.float32)
+                                  - cfg.lr * g.astype(jnp.float32)).astype(p.dtype),
+                    params, grads)
+                return new_params, state
+            new_state = jax.tree.map(
+                lambda m, g: cfg.momentum * m + g.astype(jnp.float32), state, grads)
+            new_params = jax.tree.map(
+                lambda p, m: (p.astype(jnp.float32) - cfg.lr * m).astype(p.dtype),
+                params, new_state)
+            return new_params, new_state
+
+        return Optimizer(init=init, update=update)
+
+    if cfg.kind == "adamw":
+        def init(params):
+            z = lambda p: jnp.zeros_like(p, jnp.float32)
+            return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+        def update(grads, state, params, step):
+            grads = _clip(grads, cfg.grad_clip)
+            t = step.astype(jnp.float32) + 1.0
+            b1, b2 = cfg.beta1, cfg.beta2
+            m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                             state["m"], grads)
+            v = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                             * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+            mh = jax.tree.map(lambda m: m / (1 - b1 ** t), m)
+            vh = jax.tree.map(lambda v: v / (1 - b2 ** t), v)
+            def upd(p, mh, vh):
+                step_ = cfg.lr * mh / (jnp.sqrt(vh) + cfg.eps)
+                if cfg.weight_decay:
+                    step_ = step_ + cfg.lr * cfg.weight_decay * p.astype(jnp.float32)
+                return (p.astype(jnp.float32) - step_).astype(p.dtype)
+            return jax.tree.map(upd, params, mh, vh), {"m": m, "v": v}
+
+        return Optimizer(init=init, update=update)
+
+    raise ValueError(cfg.kind)

@@ -1,0 +1,138 @@
+"""Attention variants: masks, M-RoPE, MLA absorbed-vs-naive decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models.config import ModelConfig
+
+
+def test_causal_mask_window():
+    m = np.asarray(attn.causal_mask(6, 6, window=3))
+    for i in range(6):
+        for j in range(6):
+            assert m[i, j] == (j <= i and j > i - 3)
+
+
+def test_sliding_window_equals_full_for_large_window():
+    cfg = ModelConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                      d_ff=64, vocab=32, dtype="float32")
+    p = attn.gqa_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 8, 32)),
+                    jnp.float32)
+    y_full = attn.gqa_forward(cfg, p, x, window=0)
+    y_win = attn.gqa_forward(cfg, p, x, window=100)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_win),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_mrope_reduces_to_rope_for_equal_streams():
+    """With identical (t,h,w) position streams, M-RoPE == plain RoPE."""
+    from repro.models.layers import apply_mrope, apply_rope
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 5, 3, 16)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(5), (2, 5))
+    pos3 = jnp.broadcast_to(pos[None], (3, 2, 5))
+    a = apply_rope(x, pos, 10_000.0)
+    b = apply_mrope(x, pos3, 10_000.0, (3, 2, 3))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_rope_relative_property():
+    """RoPE: <q_m, k_n> depends only on (m - n)."""
+    from repro.models.layers import apply_rope
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 8)), jnp.float32)
+
+    def score(m, n):
+        qm = apply_rope(q, jnp.asarray([[m]]), 10_000.0)
+        kn = apply_rope(k, jnp.asarray([[n]]), 10_000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert abs(score(3, 1) - score(7, 5)) < 1e-4
+    assert abs(score(2, 2) - score(9, 9)) < 1e-4
+
+
+def test_mla_absorbed_equals_naive_decode():
+    cfg = ModelConfig(d_model=32, n_heads=4, n_kv_heads=4, d_ff=64,
+                      vocab=32, attn_kind="mla", mla_q_lora=16,
+                      mla_kv_lora=8, mla_rope_dim=4, mla_nope_dim=8,
+                      mla_v_dim=8, dtype="float32")
+    p = attn.mla_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.default_rng(0)
+    x_t = jnp.asarray(rng.normal(size=(2, 1, 32)), jnp.float32)
+    cache = attn.init_mla_cache(cfg, 2, 8, jnp.float32)
+    # seed the cache with a few tokens
+    for t in range(3):
+        xt = jnp.asarray(rng.normal(size=(2, 1, 32)), jnp.float32)
+        _, cache = attn.mla_decode(cfg, p, xt, jnp.asarray(t, jnp.int32),
+                                   cache)
+    y_abs, _ = attn.mla_decode(cfg, p, x_t, jnp.asarray(3, jnp.int32),
+                               cache, absorbed=True)
+    y_naive, _ = attn.mla_decode(cfg, p, x_t, jnp.asarray(3, jnp.int32),
+                                 cache, absorbed=False)
+    np.testing.assert_allclose(np.asarray(y_abs), np.asarray(y_naive),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_mla_forward_matches_decode_chain():
+    cfg = ModelConfig(d_model=32, n_heads=4, n_kv_heads=4, d_ff=64,
+                      vocab=32, attn_kind="mla", mla_q_lora=16,
+                      mla_kv_lora=8, mla_rope_dim=4, mla_nope_dim=8,
+                      mla_v_dim=8, dtype="float32")
+    p = attn.mla_init(jax.random.PRNGKey(1), cfg, jnp.float32)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(1, 6, 32)), jnp.float32)
+    y_full = attn.mla_forward(cfg, p, x)
+
+    cache = attn.init_mla_cache(cfg, 1, 8, jnp.float32)
+    for t in range(6):
+        y_t, cache = attn.mla_decode(cfg, p, x[:, t:t + 1],
+                                     jnp.asarray(t, jnp.int32), cache)
+    np.testing.assert_allclose(np.asarray(y_t[:, 0]),
+                               np.asarray(y_full[:, -1]), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_gqa_grouping_correctness():
+    """GQA with K kv-heads must equal MHA where kv heads are repeated."""
+    rng = np.random.default_rng(3)
+    B, S, H, K, hd = 1, 4, 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+    mask = attn.causal_mask(S, S)
+    y_gqa = attn._sdpa(q, k, v, mask, 1.0)
+    k_rep = jnp.repeat(k, H // K, axis=2)
+    v_rep = jnp.repeat(v, H // K, axis=2)
+    y_mha = attn._sdpa(q, k_rep, v_rep, mask, 1.0)
+    np.testing.assert_allclose(np.asarray(y_gqa), np.asarray(y_mha),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_flash_path_matches_sdpa_in_model():
+    """gqa_forward with use_flash=True (interpret mode on CPU) must
+    match the XLA SDPA path, including GQA repeat and RoPE."""
+    cfg = ModelConfig(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab=64, dtype="float32")
+    p = attn.gqa_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 128, 64)),
+                    jnp.float32)
+    y_ref = attn.gqa_forward(cfg, p, x)
+    y_flash = attn.gqa_forward(cfg.with_(use_flash=True), p, x)
+    np.testing.assert_allclose(np.asarray(y_flash), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_path_padded_seq():
+    cfg = ModelConfig(d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+                      d_ff=128, vocab=64, dtype="float32")
+    p = attn.gqa_init(jax.random.PRNGKey(1), cfg, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(1, 100, 64)),
+                    jnp.float32)
+    y_ref = attn.gqa_forward(cfg, p, x)
+    y_flash = attn.gqa_forward(cfg.with_(use_flash=True), p, x)
+    np.testing.assert_allclose(np.asarray(y_flash), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-5)

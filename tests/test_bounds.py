@@ -1,0 +1,76 @@
+"""Theorem-level empirical bound checks (Sec. 3 of the paper).
+
+These are the paper's own claims validated on simulations:
+ - Thm. 4 : L_D <= L_P + T(Delta + 2 eps^2)/gamma^2   (vs continuous, b=1)
+ - Prop. 6: V_D <= (eta/sqrt(Delta)) L_D
+ - Prop. 5: C_C <= 2Tm|S_T|B_alpha + m|S_T|B_x
+ - Thm. 7 : C_D <= V_bound * 2m|S_T|B_alpha + m|S_T|B_x
+"""
+import numpy as np
+import pytest
+
+from repro.core import criterion, simulation
+from repro.core.accounting import ByteModel
+from repro.core.learners import LearnerConfig
+from repro.core.protocol import ProtocolConfig
+from repro.core.rkhs import KernelSpec
+from repro.data import susy_stream
+
+T, M, D = 300, 4, 8
+
+
+@pytest.fixture(scope="module")
+def runs():
+    X, Y = susy_stream(T=T, m=M, d=D, seed=0)
+    lcfg = LearnerConfig(algo="kernel_sgd", loss="hinge", eta=0.5, lam=0.01,
+                         budget=64, kernel=KernelSpec("gaussian", gamma=0.3),
+                         dim=D)
+    delta = 2.0
+    res_d = simulation.run_kernel_simulation(
+        lcfg, ProtocolConfig(kind="dynamic", delta=delta), X, Y)
+    res_c = simulation.run_kernel_simulation(
+        lcfg, ProtocolConfig(kind="continuous"), X, Y)
+    return lcfg, delta, res_d, res_c
+
+
+def test_thm4_loss_bound(runs):
+    lcfg, delta, res_d, res_c = runs
+    gamma = lcfg.eta
+    eps = float(res_d.eps_history.max()) if len(res_d.eps_history) else 0.0
+    bound = res_c.total_loss + T * (delta + 2 * eps ** 2) / gamma ** 2
+    assert res_d.total_loss <= bound + 1e-6
+
+
+def test_prop6_sync_bound(runs):
+    lcfg, delta, res_d, _ = runs
+    ok, slack = criterion.check_sync_bound(res_d, lcfg.eta, delta)
+    assert ok, f"sync bound violated, slack={slack}"
+
+
+def test_prop5_continuous_comm_bound(runs):
+    lcfg, delta, _, res_c = runs
+    bm = ByteModel(dim=D)
+    union = T * M  # worst case |S_T| <= mT
+    assert criterion.check_continuous_comm_bound(
+        res_c.total_bytes, bm, M, T, union)
+
+
+def test_thm7_dynamic_comm_bound(runs):
+    lcfg, delta, res_d, _ = runs
+    bm = ByteModel(dim=D)
+    union = T * M
+    ok, slack = criterion.check_comm_bound(
+        res_d, bm, M, union, lcfg.eta, delta)
+    assert ok, f"comm bound violated, slack={slack}"
+
+
+def test_dynamic_communicates_less_than_continuous(runs):
+    _, _, res_d, res_c = runs
+    assert res_d.total_bytes < res_c.total_bytes
+    assert res_d.num_syncs < res_c.num_syncs
+
+
+def test_dynamic_loss_within_factor_of_continuous(runs):
+    _, _, res_d, res_c = runs
+    # consistency in practice: no blow-up vs the continuous protocol
+    assert res_d.total_loss <= 1.5 * res_c.total_loss + 10.0

@@ -1,0 +1,81 @@
+"""Compression tests: exact epsilon, projection <= truncation error,
+and the Kivinen et al. truncation bound shape (Sec. 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression, rkhs
+from repro.core.rkhs import KernelSpec, SVModel
+
+
+def _model(budget, d, n_active, seed):
+    rng = np.random.default_rng(seed)
+    sv = np.zeros((budget, d), np.float32)
+    alpha = np.zeros((budget,), np.float32)
+    ids = -np.ones((budget,), np.int32)
+    sv[:n_active] = rng.normal(size=(n_active, d))
+    alpha[:n_active] = rng.normal(size=(n_active,)) * 0.5
+    ids[:n_active] = np.arange(n_active)
+    return SVModel(sv=jnp.asarray(sv), alpha=jnp.asarray(alpha),
+                   sv_id=jnp.asarray(ids))
+
+
+@pytest.mark.parametrize("method", ["truncate", "project"])
+def test_epsilon_is_exact_rkhs_distance(method):
+    """epsilon returned by compress equals ||f - f~||_H computed
+    independently (compressed model compared against the original)."""
+    spec = KernelSpec(kind="gaussian", gamma=0.5)
+    f = _model(10, 3, 10, seed=0)
+    fc, eps = compression.compress(spec, f, tau=6, method=method)
+    assert fc.budget == 6
+    d2 = float(rkhs.dist_sq(spec, f, fc))
+    np.testing.assert_allclose(float(eps) ** 2, max(d2, 0.0), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_projection_never_worse_than_truncation():
+    spec = KernelSpec(kind="gaussian", gamma=0.5)
+    for seed in range(5):
+        f = _model(12, 4, 12, seed=seed)
+        _, e_t = compression.truncate(spec, f, tau=7)
+        _, e_p = compression.project(spec, f, tau=7)
+        assert float(e_p) <= float(e_t) + 1e-4
+
+
+def test_truncation_keeps_largest_coefficients():
+    spec = KernelSpec(kind="linear")
+    f = _model(8, 3, 8, seed=1)
+    fc, _ = compression.truncate(spec, f, tau=4)
+    kept = set(np.asarray(fc.sv_id)[np.asarray(fc.sv_id) >= 0].tolist())
+    order = np.argsort(-np.abs(np.asarray(f.alpha)))[:4]
+    want = set(np.asarray(f.sv_id)[order].tolist())
+    assert kept == want
+
+
+def test_compress_noop_when_under_budget():
+    spec = KernelSpec(kind="gaussian")
+    f = _model(8, 3, 4, seed=2)
+    fc, eps = compression.truncate(spec, f, tau=6)
+    assert float(eps) < 1e-6
+    assert int(rkhs.num_active(fc)) == 4
+
+
+def test_truncation_error_bound_decreases_in_tau():
+    b = [compression.truncation_error_bound(0.1, t) for t in (5, 10, 20, 40)]
+    assert all(x > y for x, y in zip(b, b[1:]))
+
+
+def test_compressed_update_is_approximately_loss_proportional():
+    """Lemma 3 precondition: ||phi~(f) - phi(f)|| <= eps, where phi~ is
+    the update followed by compression.  We verify the measured eps of
+    the compression step bounds the function-space deviation."""
+    spec = KernelSpec(kind="gaussian", gamma=0.5)
+    f = _model(12, 3, 12, seed=3)
+    fc, eps = compression.truncate(spec, f, tau=8)
+    # deviation in prediction at arbitrary points is bounded by
+    # |f(x) - fc(x)| <= ||f - fc|| * sqrt(k(x,x)) = eps * 1 (gaussian)
+    X = np.random.default_rng(4).normal(size=(50, 3)).astype(np.float32)
+    gap = np.abs(np.asarray(rkhs.predict(spec, f, jnp.asarray(X)))
+                 - np.asarray(rkhs.predict(spec, fc, jnp.asarray(X))))
+    assert float(gap.max()) <= float(eps) + 1e-4

@@ -1,0 +1,75 @@
+"""Efficiency-criterion (Def. 1) audit tests: quiescence, consistency
+trend, adaptivity signature."""
+import numpy as np
+import pytest
+
+from repro.core import criterion, simulation
+from repro.core.accounting import ByteModel
+from repro.core.learners import LearnerConfig
+from repro.core.protocol import ProtocolConfig
+from repro.core.rkhs import KernelSpec
+from repro.data import separable_stream, susy_stream
+
+
+def test_quiescence_on_separable_data():
+    """The paper's headline property: when the loss reaches zero, the
+    dynamic protocol stops communicating (communication vanishes)."""
+    T, m, d = 400, 4, 8
+    X, Y = separable_stream(T, m, d=d, seed=0, margin=1.0)
+    lcfg = LearnerConfig(algo="linear_pa", loss="hinge", C=1.0, dim=d)
+    res = simulation.run_linear_simulation(
+        lcfg, ProtocolConfig(kind="dynamic", delta=1.0), X, Y)
+    assert criterion.quiescent(res, window_frac=0.25)
+    # and the last-quarter byte increments are all zero
+    q = res.cumulative_bytes
+    assert q[-1] == q[3 * T // 4]
+
+
+def test_periodic_never_quiescent():
+    T, m, d = 400, 4, 8
+    X, Y = separable_stream(T, m, d=d, seed=0, margin=1.0)
+    lcfg = LearnerConfig(algo="linear_pa", loss="hinge", C=1.0, dim=d)
+    res = simulation.run_linear_simulation(
+        lcfg, ProtocolConfig(kind="periodic", period=10), X, Y)
+    assert not criterion.quiescent(res, window_frac=0.25)
+
+
+def test_consistency_trend_bounded():
+    """L_dynamic(t) / L_serial(mt) stays bounded (consistency audit)."""
+    T, m, d = 250, 4, 8
+    X, Y = susy_stream(T, m, d=d, seed=1)
+    lcfg = LearnerConfig(algo="kernel_sgd", loss="hinge", eta=0.5, lam=0.01,
+                         budget=64, kernel=KernelSpec("gaussian", gamma=0.3),
+                         dim=d)
+    res = simulation.run_kernel_simulation(
+        lcfg, ProtocolConfig(kind="dynamic", delta=2.0), X, Y)
+    # serial run: one learner on the centralized stream (mT rounds)
+    Xs = X.reshape(T * m, 1, d)
+    Ys = Y.reshape(T * m, 1)
+    serial = simulation.run_kernel_simulation(
+        lcfg, ProtocolConfig(kind="none"), Xs, Ys)
+    trend = criterion.consistency_trend(res, serial.cumulative_loss)
+    assert np.isfinite(trend).all()
+    assert trend[-1] < 3.0     # no blow-up vs serial
+    # the trend must not be increasing without bound
+    assert trend[-1] <= trend[0] * 2.0 + 1.0
+
+
+def test_full_audit_report():
+    T, m, d = 200, 4, 8
+    X, Y = susy_stream(T, m, d=d, seed=2)
+    lcfg = LearnerConfig(algo="kernel_sgd", loss="hinge", eta=0.5, lam=0.01,
+                         budget=64, kernel=KernelSpec("gaussian", gamma=0.3),
+                         dim=d)
+    delta = 2.0
+    res = simulation.run_kernel_simulation(
+        lcfg, ProtocolConfig(kind="dynamic", delta=delta), X, Y)
+    Xs = X.reshape(T * m, 1, d)
+    Ys = Y.reshape(T * m, 1)
+    serial = simulation.run_kernel_simulation(
+        lcfg, ProtocolConfig(kind="none"), Xs, Ys)
+    rep = criterion.audit(res, serial.cumulative_loss, ByteModel(dim=d),
+                          m, union_size=T * m, eta=lcfg.eta, delta=delta)
+    assert rep.sync_bound_ok
+    assert rep.comm_bound_ok
+    assert np.isfinite(rep.consistent_ratio)

@@ -1,0 +1,154 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp
+oracle, swept over shapes and dtypes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(128, 128, 8), (256, 384, 130), (100, 200, 7), (513, 129, 64),
+          (64, 64, 3)]
+KINDS = ["gaussian", "linear", "poly"]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _data(M, N, d, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(M, d)), dtype)
+    Y = jnp.asarray(rng.normal(size=(N, d)), dtype)
+    a = jnp.asarray(rng.normal(size=(M,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(N,)), jnp.float32)
+    return X, Y, a, b
+
+
+@pytest.mark.parametrize("M,N,d", SHAPES)
+@pytest.mark.parametrize("kind", KINDS)
+def test_gram_matches_oracle(M, N, d, kind):
+    X, Y, _, _ = _data(M, N, d, jnp.float32)
+    got = ops.gram(X, Y, kind=kind, gamma=0.5, force_pallas=True)
+    want = ref.gram_ref(X, Y, kind=kind, gamma=0.5)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gram_dtypes(dtype):
+    X, Y, _, _ = _data(128, 128, 16, dtype)
+    got = ops.gram(X, Y, kind="gaussian", gamma=1.0, force_pallas=True)
+    want = ref.gram_ref(X, Y, kind="gaussian", gamma=1.0)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("M,N,d", SHAPES)
+@pytest.mark.parametrize("kind", KINDS)
+def test_quadform_matches_oracle(M, N, d, kind):
+    X, Y, a, b = _data(M, N, d, jnp.float32)
+    got = ops.quadform(X, Y, a, b, kind=kind, gamma=0.5, force_pallas=True)
+    want = ref.quadform_ref(X, Y, a, b, kind=kind, gamma=0.5)
+    np.testing.assert_allclose(got, want, rtol=5e-4,
+                               atol=5e-3 * max(1.0, abs(float(want))))
+
+
+@pytest.mark.parametrize("M,N,d", SHAPES)
+def test_rff_matches_oracle(M, N, d):
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.normal(size=(M, d)), jnp.float32)
+    W = jnp.asarray(rng.normal(size=(N, d)), jnp.float32)
+    b = jnp.asarray(rng.uniform(size=(N,)) * 6.28, jnp.float32)
+    got = ops.rff_features(X, W, b, force_pallas=True)
+    want = ref.rff_ref(X, W, b)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_rff_approximates_gaussian_kernel():
+    """E[phi(x).phi(y)] -> k(x,y): the RFF contract (Rahimi-Recht)."""
+    rng = np.random.default_rng(2)
+    d, D = 4, 4096
+    gamma = 0.7
+    X = jnp.asarray(rng.normal(size=(16, d)), jnp.float32)
+    W = jnp.asarray(rng.normal(size=(D, d)) * np.sqrt(2 * gamma), jnp.float32)
+    b = jnp.asarray(rng.uniform(size=(D,)) * 2 * np.pi, jnp.float32)
+    Z = ops.rff_features(X, W, b, force_pallas=True)
+    K_hat = np.asarray(Z @ Z.T)
+    K = np.asarray(ref.gram_ref(X, X, kind="gaussian", gamma=gamma))
+    assert np.max(np.abs(K_hat - K)) < 0.12
+
+
+def test_rkhs_dist_sq_fused():
+    rng = np.random.default_rng(3)
+    X = jnp.asarray(rng.normal(size=(130, 9)), jnp.float32)
+    Y = jnp.asarray(rng.normal(size=(200, 9)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(130,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(200,)), jnp.float32)
+    got = ops.rkhs_dist_sq(X, Y, a, b, kind="gaussian", gamma=0.5)
+    Kxx = ref.gram_ref(X, X, gamma=0.5)
+    Kyy = ref.gram_ref(Y, Y, gamma=0.5)
+    Kxy = ref.gram_ref(X, Y, gamma=0.5)
+    want = a @ Kxx @ a + b @ Kyy @ b - 2 * (a @ Kxy @ b)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4, atol=1e-3)
+
+
+# --- flash attention (kernels/flash.py) -------------------------------------
+
+def _flash_ref(q, k, v, causal=True):
+    hd = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    if causal:
+        S, L = s.shape[-2:]
+        m = jnp.arange(L)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(m[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32))
+
+
+import jax  # noqa: E402
+
+
+@pytest.mark.parametrize("S,hd,bq,bk", [(256, 64, 64, 64), (128, 128, 128, 64),
+                                        (384, 64, 128, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_oracle(S, hd, bq, bk, causal):
+    from repro.kernels.flash import flash_attention
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(3, S, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(3, S, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(3, S, hd)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                          interpret=True)
+    want = _flash_ref(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash import flash_attention
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.bfloat16)
+    got = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = _flash_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("window", [32, 100, 64])
+def test_flash_attention_sliding_window(window):
+    from repro.kernels.flash import flash_attention
+    rng = np.random.default_rng(2)
+    S, hd = 256, 64
+    q = jnp.asarray(rng.normal(size=(2, S, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, S, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, S, hd)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    # oracle: masked softmax with the band mask
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * (hd ** -0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    m = (kpos <= qpos) & (kpos > qpos - window)
+    s = jnp.where(m[None], s, -1e30)
+    want = jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,94 @@
+"""Deliverable (f): per-architecture smoke tests.
+
+For each of the 10 assigned architectures, instantiate a REDUCED
+variant of the same family (2 layers / pattern unit, d_model<=512,
+<=4 experts) and run one forward + one train step on CPU, asserting
+output shapes and absence of NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_arch_ids, get
+from repro.core.protocol import ProtocolConfig
+from repro.launch.train import init_train_state, make_train_step
+from repro.models import build
+from repro.optim import OptimizerConfig
+
+ARCHS = all_arch_ids()
+
+
+def _batch(cfg, B=2, S=16, m=None, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = (m, B) if m else (B,)
+    toks = rng.integers(0, cfg.vocab, shape + (S + 1,))
+    batch = {"tokens": jnp.asarray(toks[..., :-1], jnp.int32),
+             "labels": jnp.asarray(toks[..., 1:], jnp.int32)}
+    if cfg.arch_type == "vlm":
+        batch["embeds"] = jnp.asarray(
+            rng.normal(size=shape + (cfg.vision_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.arch_type == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=shape + (cfg.n_audio_frames, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_and_no_nans(arch):
+    cfg = get(arch).smoke()
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    logits, aux = api.forward(params, batch)
+    S_total = S + (cfg.vision_tokens if cfg.arch_type == "vlm" else 0)
+    assert logits.shape == (B, S_total, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    loss = api.loss(params, batch)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss))
+    assert float(loss) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_one_protocol_train_step(arch):
+    """One full protocol train step (2 learners) decreases nothing but
+    must produce finite loss, updated params, and valid protocol state."""
+    cfg = get(arch).smoke()
+    m = 2
+    pcfg = ProtocolConfig(kind="dynamic", delta=1e6)  # no sync expected
+    opt_cfg = OptimizerConfig(kind="sgd", lr=0.01)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, m, opt_cfg)
+    step = jax.jit(make_train_step(cfg, pcfg, opt_cfg))
+    batch = _batch(cfg, B=2, S=16, m=m)
+    new_state, loss = step(state, batch)
+    assert not bool(jnp.isnan(loss))
+    assert int(new_state.step) == 1
+    assert int(new_state.pstate.syncs) == 0
+    # params actually changed
+    diff = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                     - b.astype(jnp.float32))))
+               for a, b in zip(jax.tree.leaves(new_state.params),
+                               jax.tree.leaves(state.params)))
+    assert diff > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_loss_decreases(arch):
+    """A few steps on a tiny repeated batch must reduce the loss —
+    catches dead gradients per architecture family."""
+    cfg = get(arch).smoke()
+    m = 2
+    pcfg = ProtocolConfig(kind="continuous")
+    opt_cfg = OptimizerConfig(kind="adamw", lr=3e-3)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, m, opt_cfg)
+    step = jax.jit(make_train_step(cfg, pcfg, opt_cfg))
+    batch = _batch(cfg, B=2, S=16, m=m, seed=1)
+    losses = []
+    for _ in range(8):
+        state, loss = step(state, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses

@@ -1,0 +1,115 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression, protocol, rkhs
+from repro.core.rkhs import KernelSpec, SVModel
+
+_fin = st.floats(-3.0, 3.0, allow_nan=False, allow_infinity=False,
+                 width=32)
+
+
+def _arrays(m, d):
+    return st.lists(
+        st.lists(_fin, min_size=d, max_size=d), min_size=m, max_size=m)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=_arrays(4, 5))
+def test_sync_preserves_mean(data):
+    """Invariant: sigma (averaging) preserves the mean of the model
+    configuration — no mass is created or destroyed."""
+    st_ = {"w": jnp.asarray(np.asarray(data, np.float32))}
+    out = protocol.sigma_continuous(st_)
+    np.testing.assert_allclose(
+        np.asarray(protocol.average_model(out)["w"]),
+        np.asarray(protocol.average_model(st_)["w"]), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=_arrays(4, 5))
+def test_divergence_nonnegative_and_zero_after_sync(data):
+    st_ = {"w": jnp.asarray(np.asarray(data, np.float32))}
+    assert float(protocol.divergence(st_)) >= -1e-6
+    out = protocol.sigma_continuous(st_)
+    assert float(protocol.divergence(out)) < 1e-8
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=_arrays(5, 4), delta=st.floats(0.01, 100.0))
+def test_no_violation_implies_divergence_below_delta(data, delta):
+    """The local-condition soundness invariant (geometric monitoring):
+    all ||f_i - r|| <= sqrt(Delta) implies delta(f) <= Delta."""
+    st_ = {"w": jnp.asarray(np.asarray(data, np.float32))}
+    ref = protocol.average_model(st_)
+    violated = protocol.local_conditions(st_, ref, delta)
+    if not bool(jnp.any(violated)):
+        assert float(protocol.divergence(st_)) <= delta * (1 + 1e-5) + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(alphas=st.lists(_fin, min_size=6, max_size=6),
+       gamma=st.floats(0.05, 2.0))
+def test_rkhs_norm_nonnegative(alphas, gamma):
+    """||f||^2 = a^T K a >= 0 for any PSD kernel."""
+    rng = np.random.default_rng(0)
+    sv = rng.normal(size=(6, 3)).astype(np.float32)
+    f = SVModel(sv=jnp.asarray(sv),
+                alpha=jnp.asarray(np.asarray(alphas, np.float32)),
+                sv_id=jnp.arange(6, dtype=jnp.int32))
+    spec = KernelSpec(kind="gaussian", gamma=gamma)
+    assert float(rkhs.norm_sq(spec, f)) >= -1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(alphas=st.lists(_fin, min_size=8, max_size=8),
+       tau=st.integers(2, 7))
+def test_compression_epsilon_consistency(alphas, tau):
+    """compress returns (f~, eps) with eps^2 ~= ||f - f~||^2 >= 0 and
+    fewer active slots than tau."""
+    rng = np.random.default_rng(1)
+    sv = rng.normal(size=(8, 3)).astype(np.float32)
+    f = SVModel(sv=jnp.asarray(sv),
+                alpha=jnp.asarray(np.asarray(alphas, np.float32)),
+                sv_id=jnp.arange(8, dtype=jnp.int32))
+    spec = KernelSpec(kind="gaussian", gamma=0.5)
+    fc, eps = compression.truncate(spec, f, tau)
+    assert int(rkhs.num_active(fc)) <= tau
+    assert float(eps) >= 0.0
+    d2 = float(rkhs.dist_sq(spec, f, fc))
+    np.testing.assert_allclose(float(eps) ** 2, max(d2, 0.0), rtol=5e-2,
+                               atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(2, 6))
+def test_prop2_average_prediction_property(m):
+    """Prop. 2 as a property over random configurations."""
+    rng = np.random.default_rng(m)
+    models = []
+    for i in range(m):
+        models.append(SVModel(
+            sv=jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32)),
+            alpha=jnp.asarray(rng.normal(size=(4,)).astype(np.float32)),
+            sv_id=jnp.arange(4, dtype=jnp.int32) + 10 * i))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *models)
+    spec = KernelSpec(kind="gaussian", gamma=0.8)
+    fbar = rkhs.average_stacked(stacked)
+    X = jnp.asarray(rng.normal(size=(5, 3)).astype(np.float32))
+    want = np.mean([np.asarray(rkhs.predict(spec, f, X)) for f in models], 0)
+    got = np.asarray(rkhs.predict(spec, fbar, X))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_gram_psd(seed):
+    """Gaussian Gram matrices are PSD (up to numerical tolerance)."""
+    from repro.kernels import ref
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(12, 4)).astype(np.float32))
+    K = np.asarray(ref.gram_ref(X, X, kind="gaussian", gamma=0.5))
+    w = np.linalg.eigvalsh((K + K.T) / 2)
+    assert w.min() > -1e-4

@@ -1,0 +1,216 @@
+"""Protocol operator unit tests (Sec. 2 of the paper)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import protocol
+from repro.core.protocol import ProtocolConfig
+
+
+def _stacked(m=4, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(m, d)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(m,)), jnp.float32)}
+
+
+def test_average_model():
+    st = _stacked()
+    avg = protocol.average_model(st)
+    np.testing.assert_allclose(avg["w"], np.mean(np.asarray(st["w"]), 0),
+                               rtol=1e-6)
+
+
+def test_sigma_continuous_sets_all_to_average():
+    st = _stacked()
+    out = protocol.sigma_continuous(st)
+    avg = protocol.average_model(st)
+    for i in range(4):
+        np.testing.assert_allclose(out["w"][i], avg["w"], rtol=1e-6)
+    # averaging preserves the mean (mass conservation)
+    np.testing.assert_allclose(protocol.average_model(out)["w"], avg["w"],
+                               rtol=1e-6)
+
+
+def test_divergence_zero_after_sync():
+    st = _stacked()
+    out = protocol.sigma_continuous(st)
+    assert float(protocol.divergence(out)) < 1e-10
+    assert float(protocol.divergence(st)) > 0.0
+
+
+def test_local_conditions_imply_divergence_bound():
+    """If no local condition is violated w.r.t. reference r, then
+    delta(f) <= Delta (the geometric monitoring guarantee).
+
+    delta(f) = 1/m sum ||f_i - fbar||^2 <= 1/m sum ||f_i - r||^2
+    (the mean minimizes the mean squared distance)."""
+    rng = np.random.default_rng(1)
+    for trial in range(20):
+        m, d = 5, 4
+        st = {"w": jnp.asarray(rng.normal(size=(m, d)), jnp.float32)}
+        ref = {"w": jnp.asarray(rng.normal(size=(d,)), jnp.float32)}
+        delta = float(rng.uniform(0.5, 10.0))
+        violated = protocol.local_conditions(st, ref, delta)
+        if not bool(jnp.any(violated)):
+            assert float(protocol.divergence(st)) <= delta + 1e-6
+
+
+def test_dynamic_no_sync_below_threshold():
+    st = _stacked()
+    ref = protocol.average_model(st)
+    # huge threshold: no violation, models unchanged
+    out, new_ref, synced = protocol.sigma_dynamic(st, ref, delta=1e9)
+    assert not bool(synced)
+    np.testing.assert_allclose(out["w"], st["w"])
+
+
+def test_dynamic_sync_on_violation():
+    st = _stacked()
+    ref = protocol.average_model(st)
+    out, new_ref, synced = protocol.sigma_dynamic(st, ref, delta=1e-9)
+    assert bool(synced)
+    avg = protocol.average_model(st)
+    for i in range(4):
+        np.testing.assert_allclose(out["w"][i], avg["w"], rtol=1e-6)
+    np.testing.assert_allclose(new_ref["w"], avg["w"], rtol=1e-6)
+
+
+@pytest.mark.parametrize("kind,period", [("continuous", 1), ("periodic", 3)])
+def test_apply_protocol_schedules(kind, period):
+    cfg = ProtocolConfig(kind=kind, period=period)
+    st = _stacked()
+    state = protocol.init_state(jax.tree.map(lambda x: x[0], st), 4)
+    syncs = 0
+    for t in range(6):
+        st = _stacked(seed=t + 10)
+        st, state = protocol.apply_protocol(cfg, st, state)
+    expected = 6 if kind == "continuous" else 2
+    assert int(state.syncs) == expected
+
+
+def test_apply_protocol_counts_bytes():
+    cfg = ProtocolConfig(kind="continuous")
+    st = _stacked(m=4, d=6)
+    state = protocol.init_state(jax.tree.map(lambda x: x[0], st), 4)
+    _, state = protocol.apply_protocol(cfg, st, state)
+    # 2 * m * model_bytes = 2 * 4 * (6+1)*4 bytes
+    assert float(state.bytes_sent) == 2 * 4 * (7 * 4)
+
+
+def test_stacked_reference_mode():
+    st = _stacked()
+    one = jax.tree.map(lambda x: x[0], st)
+    state = protocol.init_state(one, 4, stacked_reference=True)
+    assert jax.tree.leaves(state.reference)[0].shape[0] == 4
+    cfg = ProtocolConfig(kind="dynamic", delta=1e-9)
+    out, new_state = protocol.apply_protocol(cfg, st, state)
+    # after sync the (stacked) reference equals the average in every slot
+    avg = protocol.average_model(st)
+    for i in range(4):
+        np.testing.assert_allclose(new_state.reference["w"][i], avg["w"],
+                                   rtol=1e-6)
+
+
+def test_mini_batch_peak_communication_guard():
+    """Sec. 4: with mini_batch=b, syncs happen at most every b rounds."""
+    cfg = ProtocolConfig(kind="dynamic", delta=1e-12, mini_batch=3)
+    st = _stacked()
+    state = protocol.init_state(jax.tree.map(lambda x: x[0], st), 4)
+    sync_rounds = []
+    for t in range(9):
+        st = _stacked(seed=t)
+        st, state = protocol.apply_protocol(cfg, st, state)
+        sync_rounds.append(int(state.syncs))
+    # syncs only at steps 3, 6, 9 -> at most 3
+    assert sync_rounds[-1] <= 3
+
+
+def test_make_protocol_step_runs_and_reduces_divergence():
+    cfg = ProtocolConfig(kind="dynamic", delta=0.5)
+
+    def local_update(model, ex):
+        x, y = ex
+        pred = model["w"] @ x
+        err = pred - y
+        return {"w": model["w"] - 0.1 * err * x}, 0.5 * err * err
+
+    step = jax.jit(protocol.make_protocol_step(cfg, local_update))
+    m, d = 4, 3
+    st = {"w": jnp.zeros((m, d))}
+    state = protocol.init_state({"w": jnp.zeros((d,))}, m)
+    rng = np.random.default_rng(0)
+    w_true = rng.normal(size=(d,))
+    for t in range(100):
+        X = rng.normal(size=(m, d)).astype(np.float32)
+        Y = (X @ w_true).astype(np.float32)
+        st, state, loss = step(st, state, (jnp.asarray(X), jnp.asarray(Y)))
+    assert float(loss) < 0.1
+    assert float(protocol.divergence(st)) < 0.5 + 1e-5
+
+
+def test_sqrt_delta_schedule_tightens_over_time():
+    """With Delta_t = delta/sqrt(t), a drift that is tolerated early
+    triggers a sync late (the paper's consistency schedule)."""
+    cfg = ProtocolConfig(kind="dynamic", delta=4.0, delta_schedule="sqrt")
+    base = {"w": jnp.zeros((3, 4))}
+    state = protocol.init_state({"w": jnp.zeros((4,))}, 3)
+    drifted = {"w": jnp.ones((3, 4)) * jnp.asarray([[1.], [0.], [-1.]])}
+    # ||f_i - r||^2 = 4 for learners 0/2. At t=1: Delta=4 -> no sync.
+    out1, state = protocol.apply_protocol(cfg, drifted, state)
+    assert int(state.syncs) == 0
+    # advance time; at t>=2, Delta = 4/sqrt(t) < 4 -> sync fires.
+    state = state._replace(step=jnp.asarray(15, jnp.int32))
+    out2, state = protocol.apply_protocol(cfg, drifted, state)
+    assert int(state.syncs) == 1
+
+
+def test_adaptive_threshold_reaches_target_sync_rate():
+    """The Sec.-4 open problem: the adaptive controller should steer
+    the sync rate to the target regardless of the initial Delta."""
+    rng = np.random.default_rng(0)
+    for delta0 in (1e-6, 1e2):
+        cfg = ProtocolConfig(kind="dynamic", delta=delta0,
+                             delta_schedule="adaptive",
+                             target_sync_rate=0.2, adapt_up=1.5)
+        m, d = 4, 6
+        st = {"w": jnp.zeros((m, d))}
+        state = protocol.init_state({"w": jnp.zeros((d,))}, m)
+        T = 400
+        for t in range(T):
+            # persistent random drift
+            st = jax.tree.map(
+                lambda x: x + jnp.asarray(rng.normal(size=x.shape) * 0.3,
+                                          jnp.float32), st)
+            st, state = protocol.apply_protocol(cfg, st, state)
+        rate = int(state.syncs) / T
+        assert 0.08 < rate < 0.45, (delta0, rate)
+
+
+def test_per_group_conditions_catch_concentrated_drift():
+    """Drift concentrated in a small group violates its proportional
+    threshold long before the global norm reaches Delta."""
+    m = 3
+    st = {"big": jnp.zeros((m, 1000)), "small": jnp.zeros((m, 10))}
+    ref = {"big": jnp.zeros((m, 1000)), "small": jnp.zeros((m, 10))}
+    # drift of norm^2 = 0.9 entirely in the small group
+    st = dict(st)
+    st["small"] = st["small"].at[0].set(jnp.sqrt(0.09) * jnp.ones(10))
+    delta = 1.0
+    glob = protocol.local_conditions(st, ref, delta)
+    assert not bool(jnp.any(glob))          # global norm 0.9 < 1.0
+    per = protocol.group_local_conditions(st, ref, delta)
+    assert bool(per[0])                     # small-group share ~= 0.0099
+    # soundness: no per-group violation still implies divergence <= Delta
+    st2 = {"big": jnp.zeros((m, 1000)), "small": jnp.zeros((m, 10))}
+    per2 = protocol.group_local_conditions(st2, ref, delta)
+    assert not bool(jnp.any(per2))
+
+
+def test_per_group_protocol_round():
+    cfg = ProtocolConfig(kind="dynamic", delta=1.0, per_group=True)
+    m = 3
+    st = {"big": jnp.zeros((m, 100)), "small": jnp.ones((m, 4)) * 0.5}
+    state = protocol.init_state({"big": jnp.zeros(100), "small": jnp.zeros(4)}, m)
+    out, new_state = protocol.apply_protocol(cfg, st, state)
+    assert int(new_state.syncs) == 1   # small-group drift triggers

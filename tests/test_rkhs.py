@@ -1,0 +1,103 @@
+"""RKHS machinery tests: Prop. 2 averaging, distances, divergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rkhs
+from repro.core.rkhs import KernelSpec, SVModel
+
+
+def _model(budget, d, n_active, seed, id_offset=0):
+    rng = np.random.default_rng(seed)
+    sv = np.zeros((budget, d), np.float32)
+    alpha = np.zeros((budget,), np.float32)
+    ids = -np.ones((budget,), np.int32)
+    sv[:n_active] = rng.normal(size=(n_active, d))
+    alpha[:n_active] = rng.normal(size=(n_active,))
+    ids[:n_active] = np.arange(n_active) + id_offset
+    return SVModel(sv=jnp.asarray(sv), alpha=jnp.asarray(alpha),
+                   sv_id=jnp.asarray(ids))
+
+
+def test_predict_linear_kernel_equals_primal():
+    """For the linear kernel, f(x) = (sum_i alpha_i x_i) . x — check the
+    dual prediction against the explicit primal weight vector."""
+    spec = KernelSpec(kind="linear")
+    f = _model(8, 5, 6, seed=0)
+    w = np.sum(np.asarray(f.alpha)[:, None] * np.asarray(f.sv), axis=0)
+    X = np.random.default_rng(1).normal(size=(7, 5)).astype(np.float32)
+    got = rkhs.predict(spec, f, jnp.asarray(X))
+    np.testing.assert_allclose(got, X @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_norm_and_dist_linear_kernel():
+    spec = KernelSpec(kind="linear")
+    f = _model(8, 5, 6, seed=0)
+    g = _model(8, 5, 4, seed=1, id_offset=100)
+    wf = np.sum(np.asarray(f.alpha)[:, None] * np.asarray(f.sv), axis=0)
+    wg = np.sum(np.asarray(g.alpha)[:, None] * np.asarray(g.sv), axis=0)
+    np.testing.assert_allclose(float(rkhs.norm_sq(spec, f)), wf @ wf,
+                               rtol=1e-4)
+    np.testing.assert_allclose(float(rkhs.dist_sq(spec, f, g)),
+                               (wf - wg) @ (wf - wg), rtol=1e-4, atol=1e-4)
+
+
+def test_prop2_average_matches_function_average():
+    """Prop. 2: the averaged expansion evaluates to the average of the
+    individual functions at every point, for any kernel."""
+    spec = KernelSpec(kind="gaussian", gamma=0.7)
+    models = [_model(6, 4, 5, seed=s, id_offset=100 * s) for s in range(3)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *models)
+    fbar = rkhs.average_stacked(stacked)
+    X = np.random.default_rng(9).normal(size=(11, 4)).astype(np.float32)
+    avg_pred = np.mean(
+        [np.asarray(rkhs.predict(spec, m, jnp.asarray(X))) for m in models],
+        axis=0)
+    got = rkhs.predict(spec, fbar, jnp.asarray(X))
+    np.testing.assert_allclose(got, avg_pred, rtol=1e-4, atol=1e-5)
+
+
+def test_union_unique_count():
+    m1 = _model(6, 4, 5, seed=0, id_offset=0)
+    m2 = _model(6, 4, 3, seed=1, id_offset=3)  # ids 3,4,5 overlap 0..4
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), m1, m2)
+    n = int(rkhs.union_unique_count(stacked.sv_id))
+    assert n == len({0, 1, 2, 3, 4} | {3, 4, 5})
+
+
+def test_divergence_zero_for_identical_models():
+    spec = KernelSpec(kind="gaussian", gamma=1.0)
+    m = _model(6, 4, 5, seed=0)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), m, m, m)
+    assert abs(float(rkhs.divergence_stacked(spec, stacked))) < 1e-6
+
+
+def test_divergence_positive_for_distinct_models():
+    spec = KernelSpec(kind="gaussian", gamma=1.0)
+    models = [_model(6, 4, 5, seed=s, id_offset=10 * s) for s in range(3)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *models)
+    assert float(rkhs.divergence_stacked(spec, stacked)) > 0.0
+
+
+def test_insert_sv_free_slot_then_eviction():
+    f = rkhs.empty_model(3, 2)
+    for i in range(3):
+        f = rkhs.insert_sv(f, jnp.asarray([float(i), 0.0]),
+                           jnp.asarray(0.1 * (i + 1)), jnp.asarray(i))
+    assert int(rkhs.num_active(f)) == 3
+    # budget full: smallest-|alpha| slot (alpha=0.1, id=0) is evicted
+    f2 = rkhs.insert_sv(f, jnp.asarray([9.0, 9.0]), jnp.asarray(1.0),
+                        jnp.asarray(99), evict="smallest")
+    ids = set(np.asarray(f2.sv_id).tolist())
+    assert 99 in ids and 0 not in ids
+    # oldest eviction: id=1 is now oldest
+    f3 = rkhs.insert_sv(f2, jnp.asarray([8.0, 8.0]), jnp.asarray(0.01),
+                        jnp.asarray(100), evict="oldest")
+    ids3 = set(np.asarray(f3.sv_id).tolist())
+    assert 100 in ids3 and 1 not in ids3
+
+
+def test_scale_model():
+    f = _model(6, 4, 5, seed=0)
+    g = rkhs.scale_model(f, 0.5)
+    np.testing.assert_allclose(np.asarray(g.alpha), 0.5 * np.asarray(f.alpha))

@@ -1,0 +1,90 @@
+"""Sharding-rule unit tests (no multi-device mesh needed: specs only)."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get
+from repro.launch import sharding as shd
+from repro.launch.specs import param_specs
+
+
+def _find(pspecs, *path):
+    node = pspecs
+    for k in path:
+        node = node[k]
+    return node
+
+
+def test_dense_param_rules():
+    cfg = get("granite_8b")
+    specs = param_specs(cfg)
+    ps = shd.param_pspec(specs, model_size=16)
+    st = ps["stages"][0]
+    assert _find(st, "b0", "attn", "wq", "w") == P(None, None, "model")
+    assert _find(st, "b0", "attn", "wo", "w") == P(None, "model", None)
+    assert _find(st, "b0", "mlp", "wi", "w") == P(None, None, "model")
+    assert _find(st, "b0", "mlp", "wo", "w") == P(None, "model", None)
+    assert ps["embed"]["table"] == P("model", None)
+    assert ps["lm_head"]["w"] == P(None, "model")
+    # norm scales replicated
+    assert _find(st, "b0", "norm1", "scale") == P(None, None)
+
+
+def test_moe_expert_parallel_rule():
+    cfg = get("olmoe_1b_7b")
+    ps = shd.param_pspec(param_specs(cfg), model_size=16)
+    st = ps["stages"][0]
+    assert _find(st, "b0", "moe", "wi") == P(None, "model", None, None)
+    assert _find(st, "b0", "moe", "wo") == P(None, "model", None, None)
+    assert _find(st, "b0", "moe", "router", "w") == P(None, None, None)
+
+
+def test_nondivisible_dims_replicated():
+    cfg = get("mamba2_130m")
+    ps = shd.param_pspec(param_specs(cfg), model_size=16)
+    st = ps["stages"][0]
+    # in_proj out-dim (mixed concat 3352) not divisible -> replicated
+    assert _find(st, "b0", "ssm", "in_proj", "w") == P(None, None, None)
+    # out_proj in-dim 1536 divisible -> sharded
+    assert _find(st, "b0", "ssm", "out_proj", "w") == P(None, "model", None)
+
+
+def test_learner_axis_prepended():
+    cfg = get("qwen2_5_3b")
+    specs = param_specs(cfg)
+    stacked = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((16,) + tuple(l.shape), l.dtype), specs)
+    ps = shd.param_pspec(stacked, model_size=16, learner_axes=("data",))
+    st = ps["stages"][0]
+    assert st["b0"]["attn"]["wq"]["w"] == P("data", None, None, "model")
+    assert ps["embed"]["table"] == P("data", "model", None)
+
+
+def test_multipod_learner_axes():
+    cfg = get("qwen2_5_3b")
+    specs = param_specs(cfg)
+    stacked = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((32,) + tuple(l.shape), l.dtype), specs)
+    ps = shd.param_pspec(stacked, model_size=16,
+                         learner_axes=("pod", "data"))
+    assert ps["embed"]["table"] == P(("pod", "data"), "model", None)
+
+
+def test_cache_pspec_shards_batch_and_length():
+    cfg = get("granite_8b")
+    from repro.launch.specs import cache_specs
+    cs = cache_specs(cfg, B=128, length=32768)
+    ps = shd.cache_pspec(cs, ("data",), batch=128, n_batch_axes_size=16,
+                         model_size=16)
+    k_spec = ps[0]["b0"].k
+    assert k_spec == P(None, "data", "model", None, None)
+
+
+def test_cache_pspec_small_batch_replicated():
+    cfg = get("granite_8b")
+    from repro.launch.specs import cache_specs
+    cs = cache_specs(cfg.with_(window=4096), B=1, length=4096)
+    ps = shd.cache_pspec(cs, ("data",), batch=1, n_batch_axes_size=16,
+                         model_size=16)
+    k_spec = ps[0]["b0"].k
+    assert k_spec == P(None, None, "model", None, None)
