@@ -47,9 +47,13 @@ class ByteModel:
         return self.dtype_bytes + self.id_bytes
 
 
-def _idset(ids: np.ndarray) -> set:
+def idset(ids: np.ndarray) -> set:
+    """Active sv_id set of an id array (negative = empty slot)."""
     ids = np.asarray(ids).reshape(-1)
     return set(int(i) for i in ids if i >= 0)
+
+
+_idset = idset
 
 
 def sync_bytes_kernel(

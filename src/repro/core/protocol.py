@@ -107,7 +107,12 @@ class ProtocolState(NamedTuple):
     syncs: jnp.ndarray
     bytes_sent: jnp.ndarray
     last_divergence: jnp.ndarray
-    delta_scale: jnp.ndarray = None   # adaptive-threshold multiplier
+    # adaptive-threshold multiplier; the neutral scale 1 makes a state
+    # built without it behave identically under every schedule.  A
+    # weak-typed Python scalar, not a jnp array: a class-level array
+    # default would initialize the JAX backend at import time and lock
+    # the device count before launchers can set XLA_FLAGS.
+    delta_scale: jnp.ndarray = 1.0
 
 
 # ---------------------------------------------------------------------------
@@ -342,7 +347,7 @@ def apply_protocol(
     delta_eff = jnp.asarray(cfg.delta, jnp.float32)
     if cfg.delta_schedule == "sqrt":
         delta_eff = delta_eff / jnp.sqrt(step.astype(jnp.float32))
-    scale = state.delta_scale if state.delta_scale is not None else jnp.ones(())
+    scale = state.delta_scale
     if cfg.delta_schedule == "adaptive":
         delta_eff = delta_eff * scale
     if cfg.per_group:

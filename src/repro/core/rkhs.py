@@ -244,3 +244,20 @@ def insert_sv(
 def scale_model(f: SVModel, c: Array) -> SVModel:
     """c * f  (coefficient scaling — e.g. the (1 - eta*lambda) decay)."""
     return f._replace(alpha=f.alpha * c)
+
+
+def pad_to_budget(f: SVModel, tau: int) -> SVModel:
+    """Pad (inactive fill) or truncate an expansion to budget tau.
+
+    Both drivers use this when learners adopt a synchronized model, so
+    the serial and async adopt paths stay bit-identical.
+    """
+
+    def pad(v, fill):
+        if v.shape[0] < tau:
+            width = [(0, tau - v.shape[0])] + [(0, 0)] * (v.ndim - 1)
+            v = jnp.pad(v, width, constant_values=fill)
+        return v[:tau]
+
+    return SVModel(sv=pad(f.sv, 0.0), alpha=pad(f.alpha, 0.0),
+                   sv_id=pad(f.sv_id, -1))

@@ -99,15 +99,7 @@ def run_kernel_simulation(
 
     def set_all(models: SVModel, fsync: SVModel) -> SVModel:
         # learners adopt the (compressed) average; pad/truncate to tau.
-        def pad(field, fill):
-            v = field
-            if v.shape[0] < tau:
-                pad_width = [(0, tau - v.shape[0])] + [(0, 0)] * (v.ndim - 1)
-                v = jnp.pad(v, pad_width, constant_values=fill)
-            return v[:tau]
-
-        one = SVModel(sv=pad(fsync.sv, 0.0), alpha=pad(fsync.alpha, 0.0),
-                      sv_id=pad(fsync.sv_id, -1))
+        one = rkhs.pad_to_budget(fsync, tau)
         return SVModel(
             sv=jnp.broadcast_to(one.sv[None], (m,) + one.sv.shape),
             alpha=jnp.broadcast_to(one.alpha[None], (m,) + one.alpha.shape),

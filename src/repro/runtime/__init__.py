@@ -1,0 +1,30 @@
+"""Asynchronous event-driven protocol runtime (DESIGN.md Sec. 6).
+
+- clock:          discrete-event queue + seeded latency/straggler/failure
+                  models; deterministic under seed.
+- transport:      delta-encoded messages metered with the Sec. 3
+                  ByteModel; per-link byte/latency stats.
+- nodes:          LearnerNode (any core.learners update on its own
+                  stream) and CoordinatorNode (staleness-weighted
+                  aggregation, no global barrier).
+- async_protocol: async sigma_periodic / sigma_dynamic + the FedAsync
+                  staleness schedules alpha_t = alpha * s(t - tau).
+- harness:        driver producing SimResult-compatible AsyncSimResult
+                  so sync and async systems plot on the same axes.
+"""
+from . import async_protocol, clock, harness, nodes, transport
+from .async_protocol import AsyncProtocolConfig, staleness_weight
+from .clock import Clock, SystemConfig, SystemModel, barrier_wall_clock
+from .harness import (AsyncSimResult, run_async_kernel_simulation,
+                      run_async_linear_simulation, run_async_simulation)
+from .nodes import CoordinatorNode, LearnerNode
+from .transport import Message, Network
+
+__all__ = [
+    "async_protocol", "clock", "harness", "nodes", "transport",
+    "AsyncProtocolConfig", "staleness_weight",
+    "Clock", "SystemConfig", "SystemModel", "barrier_wall_clock",
+    "AsyncSimResult", "run_async_kernel_simulation",
+    "run_async_linear_simulation", "run_async_simulation",
+    "CoordinatorNode", "LearnerNode", "Message", "Network",
+]

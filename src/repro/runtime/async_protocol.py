@@ -1,0 +1,193 @@
+"""Asynchronous synchronization operators (DESIGN.md Sec. 6).
+
+Asynchronous counterparts of ``core.protocol``'s sigma_periodic /
+sigma_dynamic.  The structural difference to the lockstep operators is
+*who decides when*:
+
+- **async periodic**: every learner pushes its model after each b of
+  its OWN rounds — no global round counter exists.
+- **async dynamic**: a learner reports a local-condition violation
+  ``||f_i - r||^2 > Delta`` the moment *it* observes one; the
+  coordinator then pulls every learner once and aggregates whatever
+  models have arrived when its aggregation window closes — stragglers
+  join a later window instead of blocking this one.  Quiescence needs
+  no global barrier: when no learner violates, no message is ever sent.
+
+Aggregation is staleness-weighted in the FedAsync style: a model based
+on coordinator version ``tau`` merged at version ``t`` gets mixing
+weight
+
+    alpha_t = alpha * s(t - tau),   s in {constant, hinge, poly},
+
+each arrived model k forms the candidate
+``(1 - alpha_t^k) r + alpha_t^k f_k`` and the new reference is the
+plain average of the candidates, compressed back to the sync budget.
+With ``alpha = 1`` and the constant schedule every candidate collapses
+to its model and the update degenerates to the paper's Prop. 2 average
+over the arrived subset — which is why the zero-latency async run
+reproduces the serial simulator byte-for-byte (bench_async).
+
+In an RKHS the convex combination of two expansions is the
+concatenation of the coefficient-scaled expansions; exact-zero
+coefficients are pruned before compression so the degenerate alpha=1
+case produces the identical slot multiset as the serial average.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Set, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import compression
+from ..core.learners import LinearLearnerState
+from ..core.rkhs import KernelSpec, SVModel
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncProtocolConfig:
+    """Configuration of the asynchronous protocol.
+
+    Attributes:
+      kind: ``periodic`` (push every ``period`` local rounds) or
+        ``dynamic`` (violation-triggered, threshold ``delta``).
+      period: local-round push period (periodic only).
+      delta: divergence threshold Delta (dynamic only).
+      mini_batch: local conditions are checked every ``mini_batch``
+        local rounds (same role as in the serial protocol).
+      alpha: base mixing weight of an arriving model.  ``1.0`` +
+        constant schedule = plain averaging of the arrived subset.
+      staleness: ``constant | hinge | poly`` — the s(.) schedule.
+      stale_a / stale_b: schedule shape parameters (FedAsync: hinge is
+        1 for lag <= b then 1/(a (lag - b)); poly is (lag+1)^-a).
+      agg_window: how long (sim time) the coordinator collects arrived
+        models after the first one before aggregating.  0 still batches
+        all same-instant arrivals (event order is deterministic).
+      control_bytes: metered size of control messages (violation
+        reports / pull requests).  The paper's Sec. 3 accounting counts
+        model payloads only, so this defaults to 0.
+    """
+
+    kind: str = "dynamic"
+    period: int = 10
+    delta: float = 0.1
+    mini_batch: int = 1
+    alpha: float = 1.0
+    staleness: str = "constant"
+    stale_a: float = 0.5
+    stale_b: int = 4
+    agg_window: float = 0.0
+    control_bytes: int = 0
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("periodic", "dynamic"):
+            raise ValueError(f"unknown async protocol kind: {self.kind!r}")
+        if self.staleness not in ("constant", "hinge", "poly"):
+            raise ValueError(f"unknown staleness schedule: {self.staleness!r}")
+        if not (0.0 < self.alpha <= 1.0):
+            raise ValueError("alpha in (0, 1]")
+        if self.period < 1 or self.mini_batch < 1:
+            raise ValueError("period and mini_batch must be >= 1")
+        if self.staleness != "constant" and self.stale_a <= 0:
+            raise ValueError("stale_a must be > 0 for hinge/poly schedules")
+        if self.agg_window < 0:
+            raise ValueError("agg_window must be >= 0")
+
+
+def staleness_weight(cfg: AsyncProtocolConfig, lag: int) -> float:
+    """s(t - tau), clipped to (0, 1]."""
+    lag = max(int(lag), 0)
+    if cfg.staleness == "constant":
+        s = 1.0
+    elif cfg.staleness == "hinge":
+        s = 1.0 if lag <= cfg.stale_b else 1.0 / (cfg.stale_a * (lag - cfg.stale_b))
+    else:  # poly
+        s = float((lag + 1) ** (-cfg.stale_a))
+    return min(max(s, 1e-12), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Staleness-weighted aggregation
+# ---------------------------------------------------------------------------
+
+
+def _concat_sv(parts: Sequence[Tuple[SVModel, float]]) -> SVModel:
+    """Concatenate coefficient-scaled expansions; prune exact zeros.
+
+    Pruning (alpha == 0 -> slot inactive) keeps the degenerate
+    full-weight case bit-identical to ``rkhs.average_stacked``: the
+    reference's slots enter with weight exactly 0 and vanish, leaving
+    the same active-slot multiset in the same order.
+    """
+    svs, alphas, ids = [], [], []
+    for model, w in parts:
+        svs.append(np.asarray(model.sv))
+        alphas.append(np.asarray(model.alpha) * np.float32(w))
+        ids.append(np.asarray(model.sv_id))
+    sv = np.concatenate(svs, axis=0)
+    alpha = np.concatenate(alphas, axis=0).astype(np.float32)
+    sv_id = np.concatenate(ids, axis=0)
+    dead = (alpha == 0.0) | (sv_id < 0)
+    sv_id = np.where(dead, -1, sv_id)
+    sv = np.where(dead[:, None], 0.0, sv).astype(np.float32)
+    alpha = np.where(dead, 0.0, alpha)
+    return SVModel(sv=jnp.asarray(sv), alpha=jnp.asarray(alpha),
+                   sv_id=jnp.asarray(sv_id, jnp.int32))
+
+
+def aggregate_kernel(
+    spec: KernelSpec,
+    reference: SVModel,
+    models: Sequence[SVModel],
+    weights: Sequence[float],
+    sync_budget: int,
+    method: str = "truncate",
+) -> Tuple[SVModel, float, Set[int]]:
+    """Staleness-weighted RKHS aggregation.
+
+    candidate_k = (1 - w_k) r + w_k f_k ; the new reference is the mean
+    of the candidates compressed to ``sync_budget``.  Returns
+    (new_reference, compression epsilon, union of active sv_ids of the
+    *uncompressed* mixture — the Sbar the Sec. 3 download accounting
+    charges for).
+    """
+    n = len(models)
+    assert n == len(weights) and n > 0
+    parts: List[Tuple[SVModel, float]] = []
+    for f, w in zip(models, weights):
+        parts.append((reference, (1.0 - w)))
+        parts.append((f, w))
+    mix = _concat_sv(parts)
+    # mean over candidates: divide (not multiply by reciprocal) so the
+    # n == m full-weight case reproduces average_stacked's floats.
+    mix = mix._replace(alpha=mix.alpha / n)
+    union = set(int(i) for i in np.asarray(mix.sv_id) if i >= 0)
+    fsync, eps = compression.compress(spec, mix, sync_budget, method)
+    return fsync, float(eps), union
+
+
+def aggregate_linear(
+    reference: LinearLearnerState,
+    models: Sequence[LinearLearnerState],
+    weights: Sequence[float],
+) -> LinearLearnerState:
+    """Mean over candidates (1 - w_k) r + w_k f_k in weight space."""
+    n = len(models)
+    assert n == len(weights) and n > 0
+    w_acc = np.zeros_like(np.asarray(reference.w, np.float64))
+    b_acc = 0.0
+    rw = np.asarray(reference.w, np.float64)
+    rb = float(reference.b)
+    for st, wt in zip(models, weights):
+        w_acc += (1.0 - wt) * rw + wt * np.asarray(st.w, np.float64)
+        b_acc += (1.0 - wt) * rb + wt * float(st.b)
+    return LinearLearnerState(
+        w=jnp.asarray((w_acc / n).astype(np.float32)),
+        b=jnp.asarray(np.float32(b_acc / n)),
+    )

@@ -1,0 +1,206 @@
+"""Asynchronous experiment driver (DESIGN.md Sec. 6).
+
+Runs the same (stream, learner, kernel) workloads as
+``core.simulation`` through the event-driven runtime and reports the
+same ``SimResult`` fields — existing figure benchmarks compare the
+lockstep and asynchronous systems directly — plus async-only metrics
+(simulated wall-clock, per-link bytes, staleness statistics).
+
+Round-indexed series keep the serial driver's semantics: learners may
+reach round t at very different simulated times, but
+``cumulative_loss[t]`` always sums every learner's first t+1 rounds,
+and a synchronization's bytes are attributed to the learner round that
+triggered it.  With an ideal network (zero latency, no stragglers,
+``alpha = 1``, constant staleness) the async dynamic protocol's event
+trace collapses to the serial simulator's round structure and the byte
+ledgers agree exactly (tests/test_runtime.py, bench_async).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import accounting, compression, learners, rkhs
+from ..core.learners import LearnerConfig
+from ..core.rkhs import SVModel, empty_model
+from ..core.simulation import SimResult
+from .async_protocol import AsyncProtocolConfig
+from .clock import Clock, SystemConfig, SystemModel, barrier_wall_clock
+from .nodes import CoordinatorNode, LearnerNode, make_kernel_ops
+from .transport import Network
+
+
+@dataclasses.dataclass
+class AsyncSimResult(SimResult):
+    """SimResult plus the quantities only an async system has."""
+
+    wall_clock: float = 0.0            # simulated time to finish all streams
+    barrier_wall_clock: float = 0.0    # lockstep baseline on the same draws
+    link_bytes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    mean_staleness: float = 0.0        # mean version lag of merged models
+    max_staleness: int = 0
+    num_dropped: int = 0
+    events_processed: int = 0
+
+    @property
+    def speedup_vs_barrier(self) -> float:
+        return self.barrier_wall_clock / max(self.wall_clock, 1e-12)
+
+
+def run_async_simulation(
+    lcfg: LearnerConfig,
+    acfg: AsyncProtocolConfig,
+    X: np.ndarray,              # (T, m, d)
+    Y: np.ndarray,              # (T, m)
+    sys_cfg: Optional[SystemConfig] = None,
+    sync_budget: Optional[int] = None,
+    compress_method: str = "truncate",
+    record_divergence: bool = True,
+    barrier_num_syncs: Optional[int] = None,
+) -> AsyncSimResult:
+    """Run T rounds of m learners under the asynchronous protocol.
+
+    record_divergence keeps per-round model snapshots — O(T m tau d)
+    memory — because an async run has no global round boundary at
+    which divergence could be computed streaming.  Matches the serial
+    driver's always-on divergence series; pass False for large T.
+
+    barrier_num_syncs prices the lockstep baseline's per-sync round
+    trips.  Async windowing can fragment aggregations, so for a fair
+    baseline pass the SERIAL simulator's sync count on the same
+    workload (bench_async does); defaults to this run's own count.
+    """
+    T, m, d = X.shape
+    assert d == lcfg.dim
+    sys_cfg = sys_cfg or SystemConfig()
+    model = SystemModel(sys_cfg, m)
+    compute_times = model.draw_compute(T)
+
+    clock = Clock()
+    network = Network(clock, model)
+    bm = accounting.ByteModel(dim=d)
+
+    loss_out = np.zeros((T, m))
+    err_out = np.zeros((T, m))
+
+    if lcfg.is_kernel:
+        tau = lcfg.budget
+        sync_budget = sync_budget or tau
+        spec = lcfg.kernel
+        ops = make_kernel_ops(lcfg)
+        # r_1: the (empty) compressed average, as in the serial driver
+        reference0, _ = compression.compress(
+            spec, empty_model(tau, d), sync_budget, compress_method)
+        snap_sv = np.zeros((T, m, tau, d), np.float32) if record_divergence else None
+        snap_alpha = np.zeros((T, m, tau), np.float32) if record_divergence else None
+        snap_id = -np.ones((T, m, tau), np.int32) if record_divergence else None
+
+        def snapshot(t, i, f: SVModel):
+            if record_divergence:
+                snap_sv[t, i] = np.asarray(f.sv)
+                snap_alpha[t, i] = np.asarray(f.alpha)
+                snap_id[t, i] = np.asarray(f.sv_id)
+    else:
+        ops = None
+        reference0 = learners.init_linear_state(lcfg)
+        snap_w = np.zeros((T, m, d), np.float32) if record_divergence else None
+        snap_b = np.zeros((T, m), np.float32) if record_divergence else None
+
+        def snapshot(t, i, st):
+            if record_divergence:
+                snap_w[t, i] = np.asarray(st.w)
+                snap_b[t, i] = float(st.b)
+
+    coord = CoordinatorNode(
+        lcfg, acfg, bm, clock, network, m, reference0,
+        sync_budget=(sync_budget if lcfg.is_kernel else 0),
+        compress_method=compress_method)
+    nodes = []
+    for i in range(m):
+        node = LearnerNode(
+            i, lcfg, acfg, bm, clock, network,
+            X[:, i], Y[:, i], compute_times[:, i], ops,
+            loss_out, err_out,
+            snapshot=snapshot if record_divergence else None)
+        node.reference = reference0
+        nodes.append(node)
+    for node in nodes:
+        node.start()
+    clock.run()
+
+    # ---- round-indexed series ---------------------------------------------
+    cum_loss = np.cumsum(loss_out.sum(axis=1))
+    cum_err = np.cumsum(err_out.sum(axis=1))
+    bytes_by_round = np.zeros((T,), np.int64)
+    for rnd, nbytes, _kind in network.sent:
+        bytes_by_round[min(max(rnd, 0), T - 1)] += nbytes
+    cum_bytes = np.cumsum(bytes_by_round)
+
+    sync_rounds = np.sort(np.asarray(
+        [s["round"] for s in coord.sync_log], dtype=np.int64))
+
+    if record_divergence and lcfg.is_kernel:
+        divs = _kernel_divergences(lcfg, snap_sv, snap_alpha, snap_id)
+    elif record_divergence:
+        divs = _linear_divergences(snap_w, snap_b)
+    else:
+        divs = np.zeros((T,))
+
+    lags = coord.staleness_seen
+    return AsyncSimResult(
+        cumulative_loss=cum_loss,
+        cumulative_bytes=cum_bytes,
+        cumulative_errors=cum_err,
+        sync_rounds=sync_rounds,
+        divergences=divs,
+        eps_history=np.asarray(coord.eps_history),
+        num_syncs=len(coord.sync_log),
+        total_bytes=int(network.total_bytes),
+        total_loss=float(cum_loss[-1]) if T else 0.0,
+        wall_clock=max((n.finish_time for n in nodes), default=0.0),
+        barrier_wall_clock=barrier_wall_clock(
+            compute_times,
+            len(coord.sync_log) if barrier_num_syncs is None
+            else barrier_num_syncs,
+            model, sync_bytes=float(network.total_bytes)),
+        link_bytes=network.link_bytes(),
+        mean_staleness=float(np.mean(lags)) if lags else 0.0,
+        max_staleness=int(np.max(lags)) if lags else 0,
+        num_dropped=network.dropped,
+        events_processed=clock.events_processed,
+    )
+
+
+def _kernel_divergences(lcfg, snap_sv, snap_alpha, snap_id) -> np.ndarray:
+    """Round-indexed divergence delta(f_t) from the model snapshots,
+    computed with the same stacked ops as the serial driver."""
+    spec = lcfg.kernel
+    div_t = jax.jit(lambda f: rkhs.divergence_stacked(spec, f))
+    out = [float(div_t(SVModel(sv=jnp.asarray(snap_sv[t]),
+                               alpha=jnp.asarray(snap_alpha[t]),
+                               sv_id=jnp.asarray(snap_id[t]))))
+           for t in range(snap_sv.shape[0])]
+    return np.asarray(out)
+
+
+def _linear_divergences(snap_w, snap_b) -> np.ndarray:
+    wbar = snap_w.mean(axis=1, keepdims=True)      # (T, 1, d)
+    bbar = snap_b.mean(axis=1, keepdims=True)      # (T, 1)
+    return (((snap_w - wbar) ** 2).sum(-1) + (snap_b - bbar) ** 2).mean(axis=1)
+
+
+# Convenience wrappers mirroring core.simulation's entry points.
+
+
+def run_async_kernel_simulation(lcfg, acfg, X, Y, **kw) -> AsyncSimResult:
+    assert lcfg.is_kernel
+    return run_async_simulation(lcfg, acfg, X, Y, **kw)
+
+
+def run_async_linear_simulation(lcfg, acfg, X, Y, **kw) -> AsyncSimResult:
+    assert not lcfg.is_kernel
+    return run_async_simulation(lcfg, acfg, X, Y, **kw)

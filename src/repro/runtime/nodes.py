@@ -1,0 +1,326 @@
+"""Message-passing nodes of the asynchronous runtime (DESIGN.md Sec. 6).
+
+A :class:`LearnerNode` runs any ``core.learners`` update on its own
+stream at its own (straggler-perturbed) pace; a
+:class:`CoordinatorNode` owns the reference model and aggregates
+arriving models with staleness weights.  Nodes interact ONLY through
+``transport.Network`` messages — there is no shared state and no
+global barrier, so the same node code would run unchanged over real
+sockets.
+
+Message kinds (all payloads are plain dicts):
+
+  report   learner -> coord   local-condition violation (control)
+  pull     coord  -> learner  request for the current model (control)
+  upload   learner -> coord   delta-encoded model
+  download coord  -> learner  delta-encoded aggregated reference
+
+The dynamic flow is: a learner that observes ``||f_i - r||^2 > Delta``
+sends ``report``; the coordinator opens an *episode* (ignoring further
+reports while one is open) and pulls every learner; each pull is
+answered at most once per episode.  Arriving uploads are collected in
+an aggregation window; at window close the coordinator aggregates
+whatever arrived — late stragglers simply open the next window and are
+discounted by their staleness weight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import learners, rkhs
+from ..core.learners import KernelLearnerState, LearnerConfig, LinearLearnerState
+from ..core.accounting import ByteModel
+from .async_protocol import (AsyncProtocolConfig, aggregate_kernel,
+                             aggregate_linear, staleness_weight)
+from .clock import Clock
+from .transport import (Message, Network, idset, kernel_payload_bytes,
+                        linear_payload_bytes)
+
+COORD = "coord"
+
+
+@dataclasses.dataclass
+class KernelOps:
+    """Jitted per-learner compute, shared across nodes (one compile)."""
+
+    update: Callable
+    predict: Callable
+    dist: Callable
+
+
+def make_kernel_ops(lcfg: LearnerConfig) -> KernelOps:
+    spec = lcfg.kernel
+    return KernelOps(
+        update=jax.jit(lambda st, ex: learners.update(lcfg, st, ex)),
+        predict=jax.jit(lambda f, x: rkhs.predict(spec, f, x[None])[0]),
+        dist=jax.jit(lambda f, r: rkhs.dist_sq(spec, f, r)),
+    )
+
+
+class LearnerNode:
+    """One online learner on its own stream.
+
+    Processes round t at its own pace (``compute_times[t]`` apart),
+    checks the local condition against the last reference it received,
+    and speaks the async protocol of the module docstring.  Never
+    blocks: syncs in flight do not stop the stream.
+    """
+
+    def __init__(
+        self,
+        idx: int,
+        lcfg: LearnerConfig,
+        acfg: AsyncProtocolConfig,
+        bm: ByteModel,
+        clock: Clock,
+        network: Network,
+        X: np.ndarray,              # (T, d) this learner's stream
+        Y: np.ndarray,              # (T,)
+        compute_times: np.ndarray,  # (T,)
+        ops: Optional[KernelOps],
+        loss_out: np.ndarray,       # (T, m) harness-owned
+        err_out: np.ndarray,
+        snapshot: Optional[Callable[[int, int, Any], None]] = None,
+    ):
+        self.idx = idx
+        self.name = f"learner{idx}"
+        self.lcfg, self.acfg, self.bm = lcfg, acfg, bm
+        self.clock, self.network = clock, network
+        self.X, self.Y, self.compute_times = X, Y, compute_times
+        self.ops = ops
+        self.loss_out, self.err_out = loss_out, err_out
+        self.snapshot = snapshot
+
+        self.state = learners.init_state(lcfg, idx)
+        self.reference = None        # set by harness before start()
+        self.known_union: Set[int] = set()
+        self.ref_version = 0
+        self.t = 0                   # rounds completed
+        self.last_upload_episode = -1
+        self.finish_time = 0.0
+        network.register(self.name, self.handle)
+
+    # -- stream processing --------------------------------------------------
+
+    def start(self) -> None:
+        self.clock.schedule(float(self.compute_times[0]), self._round)
+
+    def _round(self) -> None:
+        t = self.t
+        x = jnp.asarray(self.X[t])
+        y = jnp.asarray(self.Y[t])
+        # service quality before the update, as in the serial driver
+        if self.lcfg.is_kernel:
+            yhat = self.ops.predict(self.state.model, x)
+        else:
+            yhat = self.state.w @ x + self.state.b
+        if self.lcfg.loss == "hinge":
+            self.err_out[t, self.idx] = float(jnp.sign(yhat) != y)
+        else:
+            self.err_out[t, self.idx] = float((yhat - y) ** 2)
+
+        if self.lcfg.is_kernel:
+            self.state, loss = self.ops.update(self.state, (x, y))
+        else:
+            self.state, loss = learners.update(self.lcfg, self.state, (x, y))
+        self.loss_out[t, self.idx] = float(loss)
+        self.t = t + 1
+        if self.snapshot is not None:
+            self.snapshot(t, self.idx, self._model())
+
+        self._maybe_communicate(t)
+
+        if self.t < len(self.X):
+            self.clock.schedule(float(self.compute_times[self.t]), self._round)
+        else:
+            self.finish_time = self.clock.now
+
+    def _model(self):
+        return self.state.model if self.lcfg.is_kernel else self.state
+
+    def _maybe_communicate(self, t: int) -> None:
+        if self.acfg.kind == "periodic":
+            if (t + 1) % self.acfg.period == 0:
+                self._upload(round_idx=t)
+        else:  # dynamic: report a violation the moment we observe one
+            if (t + 1) % self.acfg.mini_batch == 0 and self._violated():
+                self.network.send(self.name, COORD, "report",
+                                  {"round": t, "learner": self.idx},
+                                  self.acfg.control_bytes, round=t)
+
+    def _violated(self) -> bool:
+        if self.lcfg.is_kernel:
+            d = float(self.ops.dist(self.state.model, self.reference))
+        else:
+            d = float(jnp.sum((self.state.w - self.reference.w) ** 2)
+                      + (self.state.b - self.reference.b) ** 2)
+        return d > self.acfg.delta
+
+    # -- protocol messages --------------------------------------------------
+
+    def handle(self, msg: Message) -> None:
+        if msg.kind == "pull":
+            episode = msg.payload["episode"]
+            if episode > self.last_upload_episode:
+                self.last_upload_episode = episode
+                self._upload(round_idx=self.t - 1, episode=episode)
+        elif msg.kind == "download":
+            self._adopt(msg.payload)
+        else:
+            raise ValueError(f"learner got unexpected {msg.kind!r}")
+
+    def _upload(self, round_idx: int, episode: Optional[int] = None) -> None:
+        if self.lcfg.is_kernel:
+            ids = idset(self.state.model.sv_id)
+            nbytes = kernel_payload_bytes(self.bm, ids, self.known_union)
+            model = self.state.model
+        else:
+            ids = set()
+            nbytes = linear_payload_bytes(self.lcfg.dim + 1,
+                                          self.bm.dtype_bytes)
+            model = self.state
+        self.network.send(
+            self.name, COORD, "upload",
+            {"learner": self.idx, "model": model, "ids": ids,
+             "version": self.ref_version, "round": round_idx,
+             "episode": episode},
+            nbytes, round=round_idx)
+
+    def _adopt(self, payload: Dict[str, Any]) -> None:
+        """Adopt the aggregated reference (the serial ``set_all``)."""
+        fsync = payload["model"]
+        if self.lcfg.is_kernel:
+            self.state = self.state._replace(
+                model=rkhs.pad_to_budget(fsync, self.lcfg.budget))
+        else:
+            self.state = LinearLearnerState(w=fsync.w, b=fsync.b)
+        self.reference = fsync
+        self.known_union = payload["union"]
+        self.ref_version = payload["version"]
+        if self.snapshot is not None and self.t > 0:
+            self.snapshot(self.t - 1, self.idx, self._model())
+
+
+class CoordinatorNode:
+    """Reference-model owner; staleness-weighted aggregation, no barrier."""
+
+    def __init__(
+        self,
+        lcfg: LearnerConfig,
+        acfg: AsyncProtocolConfig,
+        bm: ByteModel,
+        clock: Clock,
+        network: Network,
+        m: int,
+        reference0,
+        sync_budget: int,
+        compress_method: str = "truncate",
+        episode_timeout: Optional[float] = None,
+    ):
+        self.lcfg, self.acfg, self.bm = lcfg, acfg, bm
+        self.clock, self.network, self.m = clock, network, m
+        self.reference = reference0
+        self.sync_budget = sync_budget
+        self.compress_method = compress_method
+        self.version = 0
+        self.episode_ctr = 0
+        self.episode_open = False
+        self.window_open = False
+        self.window: Dict[int, Dict[str, Any]] = {}   # learner -> upload
+        self.eps_history: List[float] = []
+        self.sync_log: List[Dict[str, Any]] = []
+        self.staleness_seen: List[int] = []
+        # generous default: a lost pull/upload must not wedge the
+        # protocol; after the timeout new reports may re-trigger pulls.
+        if episode_timeout is None:
+            sys_cfg = network.model.cfg
+            episode_timeout = acfg.agg_window + 1.0 + 8.0 * sys_cfg.base_latency
+        self.episode_timeout = episode_timeout
+        network.register(COORD, self.handle)
+
+    def handle(self, msg: Message) -> None:
+        if msg.kind == "report":
+            self._on_report(msg)
+        elif msg.kind == "upload":
+            self._on_upload(msg)
+        else:
+            raise ValueError(f"coordinator got unexpected {msg.kind!r}")
+
+    def _on_report(self, msg: Message) -> None:
+        if self.episode_open:
+            return                      # a sync is already in flight
+        self.episode_open = True
+        self.episode_ctr += 1
+        episode = self.episode_ctr
+        for i in range(self.m):
+            self.network.send(COORD, f"learner{i}", "pull",
+                              {"episode": episode},
+                              self.acfg.control_bytes, round=msg.round)
+        self.clock.schedule(self.episode_timeout,
+                            lambda: self._episode_timeout(episode))
+
+    def _episode_timeout(self, episode: int) -> None:
+        # pulls or every upload of this episode were lost: clear the
+        # in-flight flag so a later report can re-trigger a sync.  A
+        # window holding this episode's uploads clears it itself.
+        if self.episode_open and self.episode_ctr == episode and not any(
+                e.get("episode") == episode for e in self.window.values()):
+            self.episode_open = False
+
+    def _on_upload(self, msg: Message) -> None:
+        self.window[msg.payload["learner"]] = msg.payload
+        if not self.window_open:
+            self.window_open = True
+            self.clock.schedule(self.acfg.agg_window, self._close_window)
+
+    def _close_window(self) -> None:
+        entries = list(self.window.values())
+        self.window = {}
+        self.window_open = False
+        # Only the window that merged the CURRENT episode's uploads
+        # resolves it — a straggler window replaying an old episode
+        # must not clear the flag of a sync still in flight.
+        if any(e.get("episode") == self.episode_ctr for e in entries):
+            self.episode_open = False
+        if not entries:
+            return
+
+        lags = [self.version - e["version"] for e in entries]
+        weights = [self.acfg.alpha * staleness_weight(self.acfg, lag)
+                   for lag in lags]
+        self.staleness_seen.extend(lags)
+        models = [e["model"] for e in entries]
+
+        if self.lcfg.is_kernel:
+            fsync, eps, union = aggregate_kernel(
+                self.lcfg.kernel, self.reference, models, weights,
+                self.sync_budget, self.compress_method)
+            self.eps_history.append(eps)
+        else:
+            fsync = aggregate_linear(self.reference, models, weights)
+            union = set()
+        self.version += 1
+        self.reference = fsync
+
+        trigger_round = max(e["round"] for e in entries)
+        payload = {"model": fsync, "union": union, "version": self.version}
+        for e in entries:
+            if self.lcfg.is_kernel:
+                nbytes = kernel_payload_bytes(self.bm, union, e["ids"])
+            else:
+                nbytes = linear_payload_bytes(self.lcfg.dim + 1,
+                                              self.bm.dtype_bytes)
+            self.network.send(COORD, f"learner{e['learner']}", "download",
+                              payload, nbytes, round=trigger_round)
+        self.sync_log.append({
+            "round": trigger_round,
+            "time": self.clock.now,
+            "n_models": len(entries),
+            "version": self.version,
+            "max_lag": max(lags),
+        })

@@ -1,0 +1,126 @@
+"""Message transport with delta-encoded model payloads (DESIGN.md Sec. 6).
+
+Payload sizing follows the Sec. 3 accounting of ``core.accounting``
+exactly: a support-vector expansion shipped over a link costs
+
+    |S| * B_alpha  +  |S \\ known| * B_x
+
+where ``known`` is the set of sv_ids the *receiver* already holds —
+support vectors known to the other side are never re-sent, only their
+(always-changing) coefficients are.  Summed over one full m-learner
+synchronization this reproduces ``accounting.sync_bytes_kernel`` to the
+byte (tests/test_runtime.py::test_delta_encoding_matches_accounting).
+
+The :class:`Network` routes messages between registered nodes through
+the discrete-event clock, applying the system model's latency,
+bandwidth and drop behaviour, and meters bytes / message counts /
+cumulative latency per directed link.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Set, Tuple
+
+from ..core.accounting import ByteModel, idset
+from .clock import Clock, SystemModel
+
+
+# ---------------------------------------------------------------------------
+# Delta encoding (byte sizing only — payloads stay in-memory references)
+# ---------------------------------------------------------------------------
+
+
+def kernel_payload_bytes(bm: ByteModel, send_ids: Set[int],
+                         receiver_known: Set[int]) -> int:
+    """Bytes to ship an expansion over ``send_ids`` to a receiver that
+    already caches ``receiver_known``: every coefficient, only novel
+    support vectors."""
+    return (len(send_ids) * bm.B_alpha
+            + len(send_ids - receiver_known) * bm.B_x)
+
+
+def linear_payload_bytes(num_params: int, dtype_bytes: int = 4) -> int:
+    """Dense weight vectors have no identity structure: full re-send."""
+    return num_params * dtype_bytes
+
+
+# ---------------------------------------------------------------------------
+# Messages and links
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Message:
+    src: str
+    dst: str
+    kind: str                 # "report" | "pull" | "upload" | "download"
+    payload: Any
+    nbytes: int
+    send_time: float
+    deliver_time: float = 0.0
+    round: int = -1           # learner round the content corresponds to
+
+
+@dataclasses.dataclass
+class LinkStats:
+    messages: int = 0
+    bytes: int = 0
+    dropped: int = 0
+    total_latency: float = 0.0
+
+    @property
+    def delivered(self) -> int:
+        return self.messages - self.dropped
+
+    @property
+    def mean_latency(self) -> float:
+        return self.total_latency / self.delivered if self.delivered else 0.0
+
+
+class Network:
+    """Event-driven message fabric between named nodes."""
+
+    def __init__(self, clock: Clock, model: SystemModel):
+        self.clock = clock
+        self.model = model
+        self._nodes: Dict[str, Callable[[Message], None]] = {}
+        self.links: Dict[Tuple[str, str], LinkStats] = {}
+        self.total_bytes = 0
+        self.dropped = 0
+        # metadata-only trace: payloads are model references and would
+        # pin every historical model for the run's lifetime.
+        self.sent: list = []    # (round, nbytes, kind) at send time
+
+    def register(self, name: str, handler: Callable[[Message], None]) -> None:
+        if name in self._nodes:
+            raise ValueError(f"duplicate node name {name!r}")
+        self._nodes[name] = handler
+
+    def send(self, src: str, dst: str, kind: str, payload: Any,
+             nbytes: int, round: int = -1) -> Message:
+        """Meter and enqueue a message; delivery is a clock event."""
+        if dst not in self._nodes:
+            raise KeyError(f"unknown destination {dst!r}")
+        stats = self.links.setdefault((src, dst), LinkStats())
+        msg = Message(src=src, dst=dst, kind=kind, payload=payload,
+                      nbytes=nbytes, send_time=self.clock.now, round=round)
+        # bytes leave the sender even if the network then loses them
+        stats.messages += 1
+        stats.bytes += nbytes
+        self.total_bytes += nbytes
+        self.sent.append((round, nbytes, kind))
+        if self.model.drop():
+            stats.dropped += 1
+            self.dropped += 1
+            return msg
+        latency = self.model.draw_latency(nbytes)
+        stats.total_latency += latency
+        msg.deliver_time = self.clock.now + latency
+        self.clock.schedule(latency, lambda: self._deliver(msg))
+        return msg
+
+    def _deliver(self, msg: Message) -> None:
+        self._nodes[msg.dst](msg)
+
+    def link_bytes(self) -> Dict[str, int]:
+        return {f"{s}->{d}": st.bytes for (s, d), st in self.links.items()}

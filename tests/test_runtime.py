@@ -1,0 +1,221 @@
+"""Tests of the asynchronous event-driven runtime (repro.runtime)."""
+import numpy as np
+import pytest
+
+from repro.core import accounting, simulation
+from repro.core.accounting import ByteModel
+from repro.core.criterion import check_sync_bound, quiescent
+from repro.core.learners import LearnerConfig, gamma_of
+from repro.core.protocol import ProtocolConfig
+from repro.core.rkhs import KernelSpec
+from repro.data.streams import separable_stream, susy_stream
+from repro.runtime import (AsyncProtocolConfig, Clock, SystemConfig,
+                           SystemModel, run_async_simulation,
+                           staleness_weight)
+from repro.runtime.transport import kernel_payload_bytes
+
+D = 8
+KCFG = LearnerConfig(algo="kernel_sgd", loss="hinge", eta=0.5, lam=0.01,
+                     budget=32, kernel=KernelSpec("gaussian", gamma=0.3),
+                     dim=D)
+
+
+# ---------------------------------------------------------------------------
+# Event queue / system model
+# ---------------------------------------------------------------------------
+
+
+def test_clock_orders_events_and_breaks_ties_by_schedule_order():
+    clock = Clock()
+    seen = []
+    clock.schedule(2.0, lambda: seen.append("late"))
+    clock.schedule(1.0, lambda: seen.append("a"))
+    clock.schedule(1.0, lambda: seen.append("b"))   # same time, later seq
+    clock.run()
+    assert seen == ["a", "b", "late"]
+    assert clock.now == 2.0
+
+
+def test_clock_rejects_negative_delay():
+    with pytest.raises(ValueError):
+        Clock().schedule(-1.0, lambda: None)
+
+
+def test_system_model_deterministic_and_straggler_count():
+    cfg = SystemConfig(seed=7, compute_jitter=0.4, straggler_frac=0.5,
+                       straggler_mult=3.0, base_latency=0.2,
+                       latency_jitter=0.3)
+    a, b = SystemModel(cfg, 8), SystemModel(cfg, 8)
+    np.testing.assert_array_equal(a.stragglers, b.stragglers)
+    assert len(a.stragglers) == 4
+    np.testing.assert_array_equal(a.draw_compute(50), b.draw_compute(50))
+    assert [a.draw_latency(100) for _ in range(5)] == \
+           [b.draw_latency(100) for _ in range(5)]
+
+
+# ---------------------------------------------------------------------------
+# Staleness schedules
+# ---------------------------------------------------------------------------
+
+
+def test_staleness_schedule_math():
+    const = AsyncProtocolConfig(staleness="constant")
+    hinge = AsyncProtocolConfig(staleness="hinge", stale_a=0.5, stale_b=4)
+    poly = AsyncProtocolConfig(staleness="poly", stale_a=0.5)
+    for lag in range(10):
+        assert staleness_weight(const, lag) == 1.0
+    # hinge: 1 up to b, then 1/(a (lag-b)), clipped into (0, 1]
+    assert staleness_weight(hinge, 4) == 1.0
+    assert staleness_weight(hinge, 6) == pytest.approx(1.0)  # 1/(0.5*2)=1
+    assert staleness_weight(hinge, 8) == pytest.approx(1.0 / (0.5 * 4))
+    # poly: (lag+1)^-a, monotone decreasing from 1
+    assert staleness_weight(poly, 0) == 1.0
+    assert staleness_weight(poly, 3) == pytest.approx(4.0 ** -0.5)
+    ws = [staleness_weight(poly, k) for k in range(8)]
+    assert all(w1 >= w2 for w1, w2 in zip(ws, ws[1:]))
+    assert all(0.0 < w <= 1.0 for w in ws)
+    with pytest.raises(ValueError):
+        AsyncProtocolConfig(staleness="hinge", stale_a=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Delta-encoding byte exactness
+# ---------------------------------------------------------------------------
+
+
+def test_delta_encoding_matches_accounting():
+    """Per-message transport costs summed over one full synchronization
+    must reproduce accounting.sync_bytes_kernel to the byte."""
+    bm = ByteModel(dim=D)
+    rng = np.random.default_rng(0)
+    known = set(int(i) for i in rng.choice(200, 30, replace=False))
+    local_ids = [rng.choice(200, size=rng.integers(5, 40), replace=False)
+                 for _ in range(4)]
+    expect, union = accounting.sync_bytes_kernel(bm, local_ids, known)
+
+    total = 0
+    sets = [set(int(i) for i in ids) for ids in local_ids]
+    for s in sets:                                    # uploads
+        total += kernel_payload_bytes(bm, s, known)
+    for s in sets:                                    # downloads
+        total += kernel_payload_bytes(bm, union, s)
+    assert total == expect
+
+
+def test_async_bytes_match_serial_at_zero_latency():
+    """Ideal network + alpha=1 + constant staleness: the async dynamic
+    protocol reproduces the serial simulator's ledger exactly."""
+    T, m = 150, 4
+    X, Y = susy_stream(T=T, m=m, d=D, seed=0)
+    res_s = simulation.run_kernel_simulation(
+        KCFG, ProtocolConfig(kind="dynamic", delta=2.0), X, Y)
+    res_a = run_async_simulation(
+        KCFG, AsyncProtocolConfig(kind="dynamic", delta=2.0, alpha=1.0,
+                                  staleness="constant"),
+        X, Y, sys_cfg=SystemConfig())
+    np.testing.assert_array_equal(res_s.sync_rounds, res_a.sync_rounds)
+    np.testing.assert_array_equal(res_s.cumulative_bytes,
+                                  res_a.cumulative_bytes)
+    assert res_s.total_bytes == res_a.total_bytes
+    np.testing.assert_allclose(res_s.eps_history, res_a.eps_history,
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(res_s.total_loss, res_a.total_loss, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Determinism under seed
+# ---------------------------------------------------------------------------
+
+
+def test_determinism_under_seed():
+    T, m = 120, 4
+    X, Y = susy_stream(T=T, m=m, d=D, seed=1)
+    acfg = AsyncProtocolConfig(kind="dynamic", delta=2.0, alpha=0.6,
+                               staleness="poly", agg_window=0.5)
+    sc = SystemConfig(seed=3, compute_jitter=0.3, straggler_frac=0.25,
+                      base_latency=0.4, latency_jitter=0.5,
+                      bandwidth=1e5, drop_prob=0.05)
+    r1 = run_async_simulation(KCFG, acfg, X, Y, sys_cfg=sc)
+    r2 = run_async_simulation(KCFG, acfg, X, Y, sys_cfg=sc)
+    assert r1.total_bytes == r2.total_bytes
+    assert r1.total_loss == r2.total_loss
+    assert r1.wall_clock == r2.wall_clock
+    assert r1.num_dropped == r2.num_dropped
+    np.testing.assert_array_equal(r1.sync_rounds, r2.sync_rounds)
+    np.testing.assert_array_equal(r1.cumulative_bytes, r2.cumulative_bytes)
+
+    r3 = run_async_simulation(
+        KCFG, acfg, X, Y, sys_cfg=SystemConfig(
+            seed=4, compute_jitter=0.3, straggler_frac=0.25,
+            base_latency=0.4, latency_jitter=0.5, bandwidth=1e5,
+            drop_prob=0.05))
+    assert r3.wall_clock != r1.wall_clock     # the seed actually matters
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock: stragglers hurt the barrier, not the async runtime
+# ---------------------------------------------------------------------------
+
+
+def test_async_beats_barrier_under_stragglers():
+    T, m = 100, 4
+    X, Y = susy_stream(T=T, m=m, d=D, seed=2)
+    sc = SystemConfig(seed=0, compute_jitter=0.4, straggler_frac=0.25,
+                      straggler_mult=4.0, straggler_prob=0.3)
+    res = run_async_simulation(
+        KCFG, AsyncProtocolConfig(kind="dynamic", delta=2.0), X, Y,
+        sys_cfg=sc, record_divergence=False)
+    assert res.wall_clock < res.barrier_wall_clock
+    assert res.speedup_vs_barrier > 1.0
+
+
+# ---------------------------------------------------------------------------
+# Efficiency criterion on async traces
+# ---------------------------------------------------------------------------
+
+
+def test_criterion_on_async_trace():
+    """Async traces plug into core.criterion unchanged: on a learnable
+    stream the dynamic protocol stays loss-proportional (Prop. 6) and
+    reaches quiescence — communication vanishes with the loss."""
+    T, m = 300, 4
+    X, Y = separable_stream(T=T, m=m, d=D, seed=0, margin=1.0)
+    lcfg = LearnerConfig(algo="linear_pa", loss="hinge", C=1.0, dim=D)
+    res = run_async_simulation(
+        lcfg, AsyncProtocolConfig(kind="dynamic", delta=1.0), X, Y,
+        sys_cfg=SystemConfig(), record_divergence=False)
+    ok, slack = check_sync_bound(res, gamma_of(lcfg), delta=1.0)
+    assert ok and slack >= 1.0
+    assert quiescent(res)
+    # communication really stops: flat ledger over the last quarter
+    assert res.cumulative_bytes[-1] == res.cumulative_bytes[3 * T // 4]
+
+
+def test_async_periodic_pushes_every_period():
+    T, m = 60, 3
+    X, Y = susy_stream(T=T, m=m, d=D, seed=3)
+    res = run_async_simulation(
+        KCFG, AsyncProtocolConfig(kind="periodic", period=10), X, Y,
+        sys_cfg=SystemConfig(), record_divergence=False)
+    assert res.num_syncs == T // 10
+    # every sync merged all m freshly-pushed models
+    np.testing.assert_array_equal(res.sync_rounds,
+                                  np.arange(9, T, 10, dtype=np.int64))
+
+
+def test_staleness_discount_under_latency():
+    """Slow links force merges of stale models; hinge/poly weights must
+    record positive lags and still produce a working system."""
+    T, m = 120, 4
+    X, Y = susy_stream(T=T, m=m, d=D, seed=4)
+    res = run_async_simulation(
+        KCFG,
+        AsyncProtocolConfig(kind="dynamic", delta=1.0, alpha=0.6,
+                            staleness="hinge", agg_window=0.2),
+        X, Y,
+        sys_cfg=SystemConfig(seed=1, base_latency=1.5, latency_jitter=0.5,
+                             compute_jitter=0.3),
+        record_divergence=False)
+    assert res.num_syncs > 0
+    assert res.max_staleness >= 1
+    assert np.isfinite(res.total_loss)
