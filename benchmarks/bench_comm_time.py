@@ -11,7 +11,7 @@ import time
 
 import numpy as np
 
-from repro.core import simulation
+from repro.core import engine
 from repro.core.learners import LearnerConfig
 from repro.core.protocol import ProtocolConfig
 from repro.data import separable_stream
@@ -33,8 +33,9 @@ def run(quick: bool = False):
         ("periodic_b10", ProtocolConfig(kind="periodic", period=10)),
         ("dynamic", ProtocolConfig(kind="dynamic", delta=1.0)),
     ]:
+        engine.run(lin, pcfg, X, Y)         # warm: exclude XLA compile
         t0 = time.perf_counter()
-        res = simulation.run_linear_simulation(lin, pcfg, X, Y)
+        res = engine.run(lin, pcfg, X, Y)   # scan engine; loop driver is the oracle
         wall = (time.perf_counter() - t0) * 1e6 / t
         curves[name] = res
         # communication in the last quarter of the run

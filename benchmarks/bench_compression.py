@@ -6,7 +6,7 @@ import time
 
 import numpy as np
 
-from repro.core import simulation
+from repro.core import engine
 from repro.core.learners import LearnerConfig
 from repro.core.protocol import ProtocolConfig
 from repro.core.rkhs import KernelSpec
@@ -26,10 +26,10 @@ def run(quick: bool = False):
             lcfg = LearnerConfig(
                 algo="kernel_sgd", loss="hinge", eta=0.5, lam=0.01,
                 budget=tau, kernel=KernelSpec("gaussian", gamma=0.3), dim=D)
+            pcfg = ProtocolConfig(kind="dynamic", delta=2.0)
+            engine.run(lcfg, pcfg, X, Y, compress_method=method)   # warm
             t0 = time.perf_counter()
-            res = simulation.run_kernel_simulation(
-                lcfg, ProtocolConfig(kind="dynamic", delta=2.0), X, Y,
-                compress_method=method)
+            res = engine.run(lcfg, pcfg, X, Y, compress_method=method)
             wall = (time.perf_counter() - t0) * 1e6 / t
             eps = float(res.eps_history.mean()) if len(res.eps_history) else 0.0
             rows.append(Row(

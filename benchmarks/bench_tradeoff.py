@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import simulation
+from repro.core import engine
 from repro.core.learners import LearnerConfig
 from repro.core.protocol import ProtocolConfig
 from repro.core.rkhs import KernelSpec
@@ -44,20 +44,21 @@ def run(quick: bool = False):
                         dim=D)
 
     systems = {
-        "linear_continuous": ("linear", lin, ProtocolConfig(kind="continuous")),
-        "linear_dynamic": ("linear", lin, ProtocolConfig(kind="dynamic", delta=0.1)),
-        "kernel_continuous": ("kernel", _kernel_cfg(256), ProtocolConfig(kind="continuous")),
-        "kernel_dynamic": ("kernel", _kernel_cfg(256), ProtocolConfig(kind="dynamic", delta=2.0)),
-        "kernel_dyn_compress": ("kernel", _kernel_cfg(48), ProtocolConfig(kind="dynamic", delta=2.0)),
+        "linear_continuous": (lin, ProtocolConfig(kind="continuous")),
+        "linear_dynamic": (lin, ProtocolConfig(kind="dynamic", delta=0.1)),
+        "kernel_continuous": (_kernel_cfg(256), ProtocolConfig(kind="continuous")),
+        "kernel_dynamic": (_kernel_cfg(256), ProtocolConfig(kind="dynamic", delta=2.0)),
+        "kernel_dyn_compress": (_kernel_cfg(48), ProtocolConfig(kind="dynamic", delta=2.0)),
     }
 
+    # scan engine (core/engine.py); the Python-loop driver in
+    # core/simulation.py stays the byte-for-byte oracle (tests/test_engine.py)
+    # and bench_engine reports the loop-vs-scan rounds/sec comparison.
     rows, results = [], {}
-    for name, (family, lcfg, pcfg) in systems.items():
+    for name, (lcfg, pcfg) in systems.items():
+        engine.run(lcfg, pcfg, X, Y)        # warm: exclude XLA compile
         t0 = time.perf_counter()
-        if family == "linear":
-            res = simulation.run_linear_simulation(lcfg, pcfg, X, Y)
-        else:
-            res = simulation.run_kernel_simulation(lcfg, pcfg, X, Y)
+        res = engine.run(lcfg, pcfg, X, Y)
         wall = (time.perf_counter() - t0) * 1e6 / t
         results[name] = res
         rows.append(Row(

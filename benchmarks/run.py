@@ -12,13 +12,15 @@ import time
 import traceback
 
 from . import (bench_adaptive, bench_async, bench_bounds, bench_comm_time,
-               bench_compression, bench_kernels, bench_lm_protocol,
-               bench_rff, bench_roofline, bench_stock, bench_tradeoff)
+               bench_compression, bench_engine, bench_kernels,
+               bench_lm_protocol, bench_rff, bench_roofline, bench_stock,
+               bench_tradeoff)
 from .common import print_rows
 
 SUITES = {
     "tradeoff": bench_tradeoff,        # Fig. 1(a)
     "comm_time": bench_comm_time,      # Fig. 1(b)
+    "engine": bench_engine,            # loop vs scan vs sweep (DESIGN.md 7)
     "async": bench_async,              # sync-vs-async runtime (DESIGN.md 6)
     "stock": bench_stock,              # Fig. 2
     "bounds": bench_bounds,            # Thm.4 / Prop.5 / Prop.6 / Thm.7

@@ -1,14 +1,15 @@
 """Quickstart: distributed online learning with kernels in ~40 lines.
 
 Four learners classify a non-linear stream; the dynamic protocol keeps
-them in sync only when their models drift apart.
+them in sync only when their models drift apart.  Each experiment runs
+as one compiled lax.scan (core/engine.py, DESIGN.md Sec. 7).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import simulation
+from repro.core import engine
 from repro.core.learners import LearnerConfig
 from repro.core.protocol import ProtocolConfig
 from repro.core.rkhs import KernelSpec
@@ -26,8 +27,7 @@ print(f"{'protocol':14s} {'errors':>7s} {'syncs':>6s} {'kilobytes':>10s}")
 for kind, kwargs in [("none", {}), ("continuous", {}),
                      ("periodic", {"period": 10}),
                      ("dynamic", {"delta": 2.0})]:
-    res = simulation.run_kernel_simulation(
-        learner, ProtocolConfig(kind=kind, **kwargs), X, Y)
+    res = engine.run(learner, ProtocolConfig(kind=kind, **kwargs), X, Y)
     print(f"{kind:14s} {int(res.cumulative_errors[-1]):7d} "
           f"{res.num_syncs:6d} {res.total_bytes / 1024:10.1f}")
 

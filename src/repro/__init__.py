@@ -3,4 +3,4 @@
 Paper-faithful protocol core + multi-pod JAX training/serving framework.
 See README.md / DESIGN.md / EXPERIMENTS.md."""
 
-__version__ = "0.1.0"
+__version__ = "0.2.0"

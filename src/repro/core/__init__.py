@@ -7,16 +7,18 @@
 - compression: truncation / projection with exact epsilon.
 - accounting:  byte-exact communication model of Sec. 3.
 - criterion:   Def. 1 efficiency audit + theorem-level bound checks.
-- simulation:  serial m-learner + coordinator experiment driver.
+- simulation:  serial m-learner + coordinator experiment driver (oracle).
+- engine:      device-resident lax.scan driver + protocol-grid sweep.
 - rff:         Random Fourier Features learner (Sec. 4 future work).
 """
-from . import accounting, compression, criterion, learners, protocol, rff, rkhs, simulation
+from . import (accounting, compression, criterion, engine, learners, protocol,
+               rff, rkhs, simulation)
 from .learners import LearnerConfig
 from .protocol import ProtocolConfig, ProtocolState
 from .rkhs import KernelSpec, SVModel
 
 __all__ = [
-    "accounting", "compression", "criterion", "learners", "protocol",
+    "accounting", "compression", "criterion", "engine", "learners", "protocol",
     "rff", "rkhs", "simulation",
     "LearnerConfig", "ProtocolConfig", "ProtocolState", "KernelSpec", "SVModel",
 ]

@@ -23,7 +23,7 @@ that cost so EXPERIMENTS.md can compare both topologies.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import numpy as np
 
@@ -90,6 +90,88 @@ def allreduce_bytes(num_params: int, m: int, dtype_bytes: int = 4) -> int:
     if m <= 1:
         return 0
     return int(2 * (m - 1) * num_params * dtype_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident ledger (DESIGN.md Sec. 7)
+# ---------------------------------------------------------------------------
+#
+# ``CommunicationLedger`` below runs the Sec. 3 set algebra in numpy on
+# the host — one Python call per round, which is what caps the serial
+# simulation driver at host speed.  ``DeviceLedger`` is the same
+# accounting expressed over fixed-shape sorted id arrays so it can live
+# inside a jitted ``lax.scan`` (core/engine.py): sets become
+# ID_SENTINEL-padded sorted arrays, distinctness a neighbour
+# comparison, membership a searchsorted probe (rkhs.sorted_unique /
+# rkhs.count_members).  tests/test_engine.py proves the two ledgers
+# agree byte-for-byte on randomized sync sequences.
+
+
+class DeviceLedger(NamedTuple):
+    """Jit-compatible coordinator cache: ``known`` is the sorted-unique
+    id array of Sbar_{t'} (the support set shipped at the last sync),
+    padded with rkhs.ID_SENTINEL.  Capacity is fixed at m * tau — the
+    union of m budget-tau expansions can never exceed it."""
+
+    known: "jnp.ndarray"
+
+
+def device_ledger_init(capacity: int) -> DeviceLedger:
+    """Fresh coordinator cache (nothing known — first sync ships all)."""
+    import jax.numpy as jnp
+
+    from .rkhs import ID_SENTINEL
+
+    return DeviceLedger(known=jnp.full((capacity,), ID_SENTINEL, jnp.int32))
+
+
+def device_sync_bytes_kernel(
+    bm: ByteModel, stacked_ids: "jnp.ndarray", ledger: DeviceLedger
+) -> "tuple[jnp.ndarray, DeviceLedger]":
+    """``sync_bytes_kernel`` under jit: bytes for one kernel-model sync.
+
+    stacked_ids: (m, tau) int32 active sv_ids at sync time (-1 = empty
+    slot; duplicated ids — support vectors shared after an earlier sync
+    — are transmitted / stored once, exactly as the host ledger's set
+    semantics).  Returns (bytes, ledger with known = Sbar_t).
+
+    Per learner i with distinct active set s_i, known cache K and union
+    U = ∪_i s_i (note s_i ⊆ U, so |U \\ s_i| = |U| - |s_i|):
+
+      upload   |s_i| B_alpha + |s_i \\ K| B_x
+      download |U| B_alpha + (|U| - |s_i|) B_x
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from . import rkhs
+
+    m, tau = stacked_ids.shape
+    # The arithmetic below runs in int32 (x64 is disabled by default).
+    # Worst case per sync: every learner ships tau distinct vectors and
+    # downloads a full m*tau union — refuse shapes that could wrap.
+    worst = m * tau * (bm.B_alpha + bm.B_x) * (m + 1)
+    if worst >= 2**31:
+        raise ValueError(
+            f"per-sync bytes can reach {worst} for m={m}, tau={tau}, "
+            f"d={bm.dim}, which overflows the device ledger's int32; "
+            "use the host CommunicationLedger at this scale")
+    uniq, n = jax.vmap(rkhs.sorted_unique)(stacked_ids)    # (m, tau), (m,)
+    union, u = rkhs.sorted_unique(uniq)                    # (m*tau,), ()
+    in_known = jax.vmap(
+        lambda q: rkhs.count_members(q, ledger.known))(uniq)  # (m,)
+    n_total = jnp.sum(n)
+    total = (
+        n_total * bm.B_alpha
+        + jnp.sum(n - in_known) * bm.B_x
+        + m * u * bm.B_alpha
+        + (m * u - n_total) * bm.B_x
+    )
+    cap = ledger.known.shape[0]
+    if union.shape[0] != cap:
+        raise ValueError(
+            f"union capacity {union.shape[0]} != ledger capacity {cap}")
+    return total.astype(jnp.int32), DeviceLedger(known=union)
 
 
 class CommunicationLedger:

@@ -1,0 +1,418 @@
+"""Device-resident scan simulation engine (DESIGN.md Sec. 7).
+
+``simulation.run_kernel_simulation`` drives the m-learner system with a
+Python loop: every round costs several jitted dispatches plus a host
+round-trip (``float()`` on losses / divergence) and a numpy set-algebra
+pass per sync.  This module compiles the ENTIRE T-round experiment into
+one ``jax.lax.scan``: the carry holds (stacked learner states,
+reference model, device byte ledger), every per-round observable
+(loss, errors, bytes, divergence, sync flag, compression eps) comes
+back as a T-length output array, and the host touches data exactly once
+at the end.  The Sec. 3 byte accounting runs inside the scan through
+``accounting.DeviceLedger`` (sorted-id set algebra over fixed-budget
+``sv_id`` arrays) and reproduces the host ``CommunicationLedger``
+byte-for-byte (tests/test_engine.py).
+
+``sweep`` vmaps the whole simulation across a grid of ProtocolConfigs
+(delta / period / mini_batch) and optionally per-config data streams
+(seeds), one compilation per protocol kind — the grid-evaluation
+workload of Kamp et al.'s adaptive-bounds protocol family.
+
+Static vs. traced configuration: the protocol ``kind`` changes the
+structure of the scan body (what is computed each round), so it is a
+compile-time specialization; ``delta``, ``period`` and ``mini_batch``
+are traced scalars, so one compiled executable serves a whole grid.
+
+Exactness contract against the legacy serial driver:
+
+- ``cumulative_bytes``, ``sync_rounds``, ``num_syncs`` are
+  integer-exact;
+- per-round losses / errors are the same float32 values, accumulated on
+  the host in float64 exactly like the legacy driver's accumulators;
+- the RKHS divergence series delta(f_t) is the one observable whose
+  *recording* costs a full union Gram every round, and nothing in the
+  protocol consumes it — so it is opt-in (``record_divergence=True``;
+  linear simulations always record it, the cost there is O(m d)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import accounting, compression, learners, rkhs
+from .learners import LearnerConfig
+from .protocol import PROTOCOL_KIND_CODES, ProtocolConfig
+from .rkhs import SVModel
+from .simulation import SimResult
+
+Array = jnp.ndarray
+
+
+class ScanParams(NamedTuple):
+    """The traced protocol parameters of one simulation (scalars), or of
+    a sweep (vectors of length n_configs)."""
+
+    delta: Array
+    period: Array
+    mini_batch: Array
+
+
+def _params_of(pcfg: ProtocolConfig) -> ScanParams:
+    return ScanParams(
+        delta=jnp.asarray(pcfg.delta, jnp.float32),
+        period=jnp.asarray(pcfg.period, jnp.int32),
+        mini_batch=jnp.asarray(pcfg.mini_batch, jnp.int32),
+    )
+
+
+def _stack_params(pcfgs: Sequence[ProtocolConfig]) -> ScanParams:
+    return ScanParams(
+        delta=jnp.asarray([p.delta for p in pcfgs], jnp.float32),
+        period=jnp.asarray([p.period for p in pcfgs], jnp.int32),
+        mini_batch=jnp.asarray([p.mini_batch for p in pcfgs], jnp.int32),
+    )
+
+
+def _err_of(loss: str, yhat: Array, y: Array) -> Array:
+    """Per-round summed service error, as the legacy driver measures it
+    (prediction mistakes for hinge, squared error otherwise)."""
+    if loss == "hinge":
+        return jnp.sum((jnp.sign(yhat) != y).astype(jnp.float32))
+    return jnp.sum((yhat - y) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-learner scan core
+# ---------------------------------------------------------------------------
+
+
+def _kernel_core(lcfg: LearnerConfig, kind: str, sync_budget: int,
+                 compress_method: str, record_divergence: bool):
+    spec = lcfg.kernel
+    tau = lcfg.budget
+
+    def simulate(params: ScanParams, X: Array, Y: Array):
+        T, m, d = X.shape
+        bm = accounting.ByteModel(dim=d)
+        states = [learners.init_state(lcfg, i) for i in range(m)]
+        stacked0 = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+        def make_sync(models: SVModel):
+            fbar = rkhs.average_stacked(models)          # budget m*tau
+            return compression.compress(spec, fbar, sync_budget,
+                                        compress_method)
+
+        ref0, _ = make_sync(stacked0.model)
+        ledger0 = accounting.device_ledger_init(m * tau)
+
+        vupdate = jax.vmap(functools.partial(learners.update, lcfg))
+        vpredict = jax.vmap(lambda f, x: rkhs.predict(spec, f, x[None])[0])
+
+        def adopt(models: SVModel, fsync: SVModel) -> SVModel:
+            one = rkhs.pad_to_budget(fsync, tau)
+            return SVModel(
+                sv=jnp.broadcast_to(one.sv[None], models.sv.shape),
+                alpha=jnp.broadcast_to(one.alpha[None], models.alpha.shape),
+                sv_id=jnp.broadcast_to(one.sv_id[None], models.sv_id.shape),
+            )
+
+        def step(carry, xs):
+            state, reference, ledger = carry
+            x, y, t = xs
+
+            yhat = vpredict(state.model, x)
+            err = _err_of(lcfg.loss, yhat, y)
+            state, losses = vupdate(state, (x, y))
+            loss = jnp.sum(losses)
+            models = state.model
+
+            if kind == "none":
+                do_sync = jnp.zeros((), bool)
+            elif kind == "continuous":
+                do_sync = jnp.ones((), bool)
+            elif kind == "periodic":
+                do_sync = ((t + 1) % params.period) == 0
+            else:  # dynamic: check local conditions every mini_batch rounds
+                check_now = ((t + 1) % params.mini_batch) == 0
+
+                def check(_):
+                    dists = rkhs.stacked_dist_to(spec, models, reference)
+                    return jnp.any(dists > params.delta)
+
+                do_sync = lax.cond(check_now, check,
+                                   lambda _: jnp.zeros((), bool), None)
+
+            if kind == "none":
+                new_models, new_ref, new_ledger = models, reference, ledger
+                nbytes = jnp.zeros((), jnp.int32)
+                eps = jnp.zeros((), jnp.float32)
+            else:
+
+                def sync_branch(args):
+                    models, reference, ledger = args
+                    fsync, eps = make_sync(models)
+                    nbytes, new_ledger = accounting.device_sync_bytes_kernel(
+                        bm, models.sv_id, ledger)
+                    return adopt(models, fsync), fsync, new_ledger, nbytes, eps
+
+                def keep_branch(args):
+                    models, reference, ledger = args
+                    return (models, reference, ledger,
+                            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+
+                new_models, new_ref, new_ledger, nbytes, eps = lax.cond(
+                    do_sync, sync_branch, keep_branch,
+                    (models, reference, ledger))
+
+            state = state._replace(model=new_models)
+            if record_divergence:
+                div = rkhs.divergence_stacked(spec, state.model)
+            else:
+                div = jnp.zeros((), jnp.float32)
+            out = (loss, err, nbytes, div, do_sync, eps)
+            return (state, new_ref, new_ledger), out
+
+        ts = jnp.arange(T, dtype=jnp.int32)
+        _, outs = lax.scan(step, (stacked0, ref0, ledger0), (X, Y, ts))
+        return outs
+
+    return simulate
+
+
+# ---------------------------------------------------------------------------
+# Linear-learner scan core
+# ---------------------------------------------------------------------------
+
+
+def _linear_core(lcfg: LearnerConfig, kind: str):
+    def simulate(params: ScanParams, X: Array, Y: Array):
+        T, m, d = X.shape
+        bytes_per_sync = accounting.sync_bytes_linear(d + 1, m)
+        states = [learners.init_state(lcfg, i) for i in range(m)]
+        stacked0 = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+        def avg(st):
+            return learners.LinearLearnerState(
+                w=jnp.mean(st.w, axis=0), b=jnp.mean(st.b))
+
+        ref0 = avg(stacked0)
+        vupdate = jax.vmap(functools.partial(learners.update, lcfg))
+        vpredict = jax.vmap(lambda s, x: s.w @ x + s.b)
+
+        def step(carry, xs):
+            state, reference = carry
+            x, y, t = xs
+
+            yhat = vpredict(state, x)
+            err = _err_of(lcfg.loss, yhat, y)
+            state, losses = vupdate(state, (x, y))
+            loss = jnp.sum(losses)
+
+            if kind == "none":
+                do_sync = jnp.zeros((), bool)
+            elif kind == "continuous":
+                do_sync = jnp.ones((), bool)
+            elif kind == "periodic":
+                do_sync = ((t + 1) % params.period) == 0
+            else:
+                check_now = ((t + 1) % params.mini_batch) == 0
+                dists = jax.vmap(
+                    lambda s: jnp.sum((s.w - reference.w) ** 2)
+                    + (s.b - reference.b) ** 2)(state)
+                do_sync = check_now & jnp.any(dists > params.delta)
+
+            if kind == "none":
+                new_state, new_ref = state, reference
+                nbytes = jnp.zeros((), jnp.int32)
+            else:
+
+                def sync_branch(args):
+                    state, reference = args
+                    mean = avg(state)
+                    synced = learners.LinearLearnerState(
+                        w=jnp.broadcast_to(mean.w[None], state.w.shape),
+                        b=jnp.broadcast_to(mean.b[None], state.b.shape))
+                    return synced, mean
+
+                def keep_branch(args):
+                    return args
+
+                new_state, new_ref = lax.cond(
+                    do_sync, sync_branch, keep_branch, (state, reference))
+                nbytes = jnp.where(do_sync, bytes_per_sync, 0).astype(jnp.int32)
+
+            state = new_state
+            wbar = jnp.mean(state.w, axis=0)
+            bbar = jnp.mean(state.b)
+            div = jnp.mean(jnp.sum((state.w - wbar) ** 2, -1)
+                           + (state.b - bbar) ** 2)
+            out = (loss, err, nbytes, div, do_sync,
+                   jnp.zeros((), jnp.float32))
+            return (state, new_ref), out
+
+        ts = jnp.arange(T, dtype=jnp.int32)
+        _, outs = lax.scan(step, (stacked0, ref0), (X, Y, ts))
+        return outs
+
+    return simulate
+
+
+# ---------------------------------------------------------------------------
+# Compiled-function cache and public API
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted(lcfg: LearnerConfig, kind: str, sync_budget: int,
+            compress_method: str, record_divergence: bool,
+            vmapped: bool, data_batched: bool):
+    """One jitted (optionally vmapped) simulate fn per static config.
+
+    The cache is what lets benchmarks call ``run`` in a timing loop
+    without re-tracing: jax.jit caches on function identity, so the
+    closure must be built once per static configuration.
+    """
+    if lcfg.is_kernel:
+        core = _kernel_core(lcfg, kind, sync_budget, compress_method,
+                            record_divergence)
+    else:
+        core = _linear_core(lcfg, kind)
+    if vmapped:
+        dax = 0 if data_batched else None
+        core = jax.vmap(core, in_axes=(ScanParams(0, 0, 0), dax, dax))
+    return jax.jit(core)
+
+
+def run(
+    lcfg: LearnerConfig,
+    pcfg: ProtocolConfig,
+    X: np.ndarray,          # (T, m, d)
+    Y: np.ndarray,          # (T, m)
+    *,
+    sync_budget: Optional[int] = None,
+    compress_method: str = "truncate",
+    record_divergence: bool = False,
+) -> SimResult:
+    """Run T rounds of m learners under pcfg, fully on device.
+
+    Drop-in replacement for ``simulation.run_kernel_simulation`` /
+    ``run_linear_simulation`` (dispatches on ``lcfg.is_kernel``) with
+    the exactness contract in the module docstring.
+    """
+    sb = int(sync_budget or lcfg.budget)
+    fn = _jitted(lcfg, pcfg.kind, sb, compress_method,
+                 bool(record_divergence), False, False)
+    outs = fn(_params_of(pcfg), jnp.asarray(X), jnp.asarray(Y))
+    loss, err, nbytes, div, flags, eps = (np.asarray(o) for o in outs)
+    keep_div = record_divergence or not lcfg.is_kernel
+    return SimResult.from_round_series(
+        loss, err, nbytes,
+        div if keep_div else np.zeros((0,)),
+        flags,
+        eps if lcfg.is_kernel else np.zeros((0,)))
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Stacked per-round series of a protocol-grid sweep.
+
+    Every array carries a leading axis of size n = len(configs);
+    ``sweep_result[i]`` materializes the i-th configuration as a
+    regular ``SimResult``.
+    """
+
+    configs: List[ProtocolConfig]
+    losses: np.ndarray        # (n, T)
+    errors: np.ndarray        # (n, T)
+    round_bytes: np.ndarray   # (n, T)
+    sync_flags: np.ndarray    # (n, T) bool
+    divergences: Optional[np.ndarray]  # (n, T) or None (not recorded)
+    eps: Optional[np.ndarray]          # (n, T) or None (linear learners)
+
+    def __len__(self) -> int:
+        return len(self.configs)
+
+    def __getitem__(self, i: int) -> SimResult:
+        return SimResult.from_round_series(
+            self.losses[i], self.errors[i], self.round_bytes[i],
+            self.divergences[i] if self.divergences is not None
+            else np.zeros((0,)),
+            self.sync_flags[i],
+            self.eps[i] if self.eps is not None else np.zeros((0,)))
+
+    @property
+    def results(self) -> List[SimResult]:
+        return [self[i] for i in range(len(self))]
+
+
+def sweep(
+    lcfg: LearnerConfig,
+    pcfgs: Sequence[ProtocolConfig],
+    X: np.ndarray,          # (T, m, d) shared, or (n, T, m, d) per config
+    Y: np.ndarray,          # (T, m) shared, or (n, T, m)
+    *,
+    sync_budget: Optional[int] = None,
+    compress_method: str = "truncate",
+    record_divergence: bool = False,
+) -> SweepResult:
+    """Simulate a grid of protocol configurations in one compilation.
+
+    The whole simulation (scan over T rounds, ledger included) is
+    vmapped across the config axis; configs are grouped by ``kind`` so
+    each group shares one compiled executable regardless of its delta /
+    period / mini_batch values.  Pass X with a leading config axis to
+    sweep seeds (per-config data streams) at the same time.
+    """
+    pcfgs = list(pcfgs)
+    n = len(pcfgs)
+    if n == 0:
+        raise ValueError("sweep needs at least one ProtocolConfig")
+    X = np.asarray(X)
+    Y = np.asarray(Y)
+    data_batched = X.ndim == 4
+    if data_batched and X.shape[0] != n:
+        raise ValueError(
+            f"per-config data axis {X.shape[0]} != n_configs {n}")
+    T = X.shape[1] if data_batched else X.shape[0]
+    sb = int(sync_budget or lcfg.budget)
+    is_kernel = lcfg.is_kernel
+
+    losses = np.zeros((n, T), np.float32)
+    errors = np.zeros((n, T), np.float32)
+    round_bytes = np.zeros((n, T), np.int64)
+    flags = np.zeros((n, T), bool)
+    divs = np.zeros((n, T), np.float32)
+    eps = np.zeros((n, T), np.float32)
+
+    by_kind: dict = {}
+    for i, p in enumerate(pcfgs):
+        by_kind.setdefault(p.kind, []).append(i)
+
+    for kind, idx in sorted(by_kind.items(),
+                            key=lambda kv: PROTOCOL_KIND_CODES[kv[0]]):
+        fn = _jitted(lcfg, kind, sb, compress_method,
+                     bool(record_divergence), True, data_batched)
+        params = _stack_params([pcfgs[i] for i in idx])
+        Xg = jnp.asarray(X[idx]) if data_batched else jnp.asarray(X)
+        Yg = jnp.asarray(Y[idx]) if data_batched else jnp.asarray(Y)
+        outs = fn(params, Xg, Yg)
+        lo, er, nb, dv, fl, ep = (np.asarray(o) for o in outs)
+        losses[idx], errors[idx], flags[idx] = lo, er, fl
+        round_bytes[idx], divs[idx], eps[idx] = nb, dv, ep
+
+    keep_div = record_divergence or not is_kernel
+    return SweepResult(
+        configs=pcfgs,
+        losses=losses,
+        errors=errors,
+        round_bytes=round_bytes,
+        sync_flags=flags,
+        divergences=divs if keep_div else None,
+        eps=eps if is_kernel else None,
+    )

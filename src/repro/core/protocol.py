@@ -41,6 +41,12 @@ PyTree = Any
 # Configuration
 # ---------------------------------------------------------------------------
 
+# Stable integer codes for the protocol kinds.  The scan engine
+# (core/engine.py, DESIGN.md Sec. 7) specializes its compiled step on
+# the kind and uses the code to group a sweep's configs into one
+# compilation per kind.
+PROTOCOL_KIND_CODES = {"none": 0, "continuous": 1, "periodic": 2, "dynamic": 3}
+
 
 @dataclasses.dataclass(frozen=True)
 class ProtocolConfig:
@@ -88,6 +94,11 @@ class ProtocolConfig:
             raise ValueError(self.delta_schedule)
         if not (0.0 < self.target_sync_rate < 1.0):
             raise ValueError("target_sync_rate in (0, 1)")
+
+    @property
+    def kind_code(self) -> int:
+        """Integer code of ``kind`` (see PROTOCOL_KIND_CODES)."""
+        return PROTOCOL_KIND_CODES[self.kind]
 
 
 class ProtocolState(NamedTuple):

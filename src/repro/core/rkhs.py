@@ -171,6 +171,48 @@ def average_stacked(stacked: SVModel) -> SVModel:
     )
 
 
+# Fixed-shape set algebra over sv_id arrays: a set of ids is represented
+# as a sorted int32 array whose inactive tail is padded with ID_SENTINEL.
+# This is what lets the byte accounting of Sec. 3 run under jit
+# (DESIGN.md Sec. 7): sorted arrays make distinctness a neighbour
+# comparison and membership a searchsorted probe, both static-shape.
+ID_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def sorted_unique(ids: Array) -> Tuple[Array, Array]:
+    """Sorted-distinct representation of an active id set.
+
+    ``ids`` is any int32 array where a slot is *active* iff
+    ``0 <= id < ID_SENTINEL`` (empty slots are -1, sentinel padding is
+    ID_SENTINEL — so the output of this function is a valid input,
+    making it composable for unions).  Returns ``(uniq, count)``:
+    ``uniq`` has the same (flattened) length with the distinct active
+    ids sorted ascending followed by ID_SENTINEL padding, and ``count``
+    is the number of distinct active ids.
+    """
+    flat = ids.reshape(-1)
+    active = (flat >= 0) & (flat < ID_SENTINEL)
+    s = jnp.sort(jnp.where(active, flat, ID_SENTINEL))
+    first = jnp.concatenate(
+        [s[:1] < ID_SENTINEL,
+         (s[1:] != s[:-1]) & (s[1:] < ID_SENTINEL)]
+    )
+    uniq = jnp.sort(jnp.where(first, s, ID_SENTINEL))
+    return uniq, jnp.sum(first.astype(jnp.int32))
+
+
+def count_members(queries: Array, sorted_ids: Array) -> Array:
+    """|Q ∩ A| for a sorted-unique query array Q and sorted id array A.
+
+    Both arrays use the ID_SENTINEL padding convention of
+    ``sorted_unique``; sentinel slots never count as members.
+    """
+    idx = jnp.clip(jnp.searchsorted(sorted_ids, queries), 0,
+                   sorted_ids.shape[0] - 1)
+    hit = (sorted_ids[idx] == queries) & (queries < ID_SENTINEL)
+    return jnp.sum(hit.astype(jnp.int32))
+
+
 def union_unique_count(stacked_or_avg_sv_id: Array) -> Array:
     """|Sbar| — the number of *distinct* active support vector ids.
 
@@ -178,14 +220,7 @@ def union_unique_count(stacked_or_avg_sv_id: Array) -> Array:
     vectors shared among learners after an earlier synchronization) are
     transmitted / stored once.
     """
-    ids = stacked_or_avg_sv_id.reshape(-1)
-    active = ids >= 0
-    ids_sorted = jnp.sort(jnp.where(active, ids, jnp.iinfo(jnp.int32).max))
-    is_new = jnp.concatenate(
-        [ids_sorted[:1] < jnp.iinfo(jnp.int32).max,
-         (ids_sorted[1:] != ids_sorted[:-1]) & (ids_sorted[1:] < jnp.iinfo(jnp.int32).max)]
-    )
-    return jnp.sum(is_new.astype(jnp.int32))
+    return sorted_unique(stacked_or_avg_sv_id)[1]
 
 
 def stacked_dist_to(spec: KernelSpec, stacked: SVModel, ref: SVModel) -> Array:

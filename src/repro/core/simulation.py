@@ -10,7 +10,11 @@ synchronizations, and quiescence behaviour.
 The per-round compute (m learner updates + local-condition checks) is
 one jitted function; the byte accounting (set algebra over sv_ids) runs
 in numpy outside jit, mirroring a real deployment where the
-coordinator's bookkeeping is host-side.
+coordinator's bookkeeping is host-side.  That host round-trip per
+round makes this driver the *oracle*, not the fast path: the
+device-resident ``lax.scan`` engine (core/engine.py, DESIGN.md Sec. 7)
+reproduces this driver's byte ledger exactly while touching the host
+once per run, and is what the figure benchmarks use.
 """
 from __future__ import annotations
 
@@ -49,6 +53,37 @@ class SimResult:
             return 0
         last = int(self.sync_rounds[-1])
         return last if last < len(self.cumulative_loss) - 1 else None
+
+    @classmethod
+    def from_round_series(
+        cls,
+        losses: np.ndarray,       # (T,) per-round summed loss
+        errors: np.ndarray,       # (T,) per-round summed errors
+        round_bytes: np.ndarray,  # (T,) bytes charged per round
+        divergences: np.ndarray,  # (T,) or (0,) measured delta(f_t)
+        sync_flags: np.ndarray,   # (T,) bool, True where a sync happened
+        eps: np.ndarray,          # (T,) or (0,) compression error per round
+    ) -> "SimResult":
+        """Build a SimResult from per-round series (the scan engine's
+        output format).  Accumulation happens here in float64/int64,
+        matching the legacy drivers' host-side accumulators."""
+        losses = np.asarray(losses, np.float64)
+        errors = np.asarray(errors, np.float64)
+        sync_flags = np.asarray(sync_flags, bool)
+        cum_bytes = np.cumsum(np.asarray(round_bytes, np.int64))
+        cum_loss = np.cumsum(losses)
+        return cls(
+            cumulative_loss=cum_loss,
+            cumulative_bytes=cum_bytes,
+            cumulative_errors=np.cumsum(errors),
+            sync_rounds=np.nonzero(sync_flags)[0].astype(np.int64),
+            divergences=np.asarray(divergences, np.float64),
+            eps_history=(np.asarray(eps, np.float64)[sync_flags]
+                         if len(eps) else np.zeros((0,))),
+            num_syncs=int(sync_flags.sum()),
+            total_bytes=int(cum_bytes[-1]) if len(cum_bytes) else 0,
+            total_loss=float(cum_loss[-1]) if len(cum_loss) else 0.0,
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Docs-consistency checker (run in CI).
+
+Docstrings across the tree cite DESIGN.md sections and EXPERIMENTS.md
+anchors ("DESIGN.md Sec. 7", "EXPERIMENTS.md §Perf", "EXPERIMENTS.md
+Sec. Perf").  This script verifies that every such reference resolves
+to an existing heading, and that every *.md file mentioned anywhere in
+the tree exists at the repo root — so a doc can never silently go
+dangling again (EXPERIMENTS.md was cited for two PRs before it was
+written).
+
+Exits non-zero with one line per broken reference.  Stdlib only.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "benchmarks", "tests", "examples", "tools")
+# Durable root docs also scanned for cross-references of their own.
+ROOT_MD_FILES = ("README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md",
+                 "CHANGES.md", "PAPER.md", "PAPERS.md", "SNIPPETS.md")
+
+DESIGN_SEC_RE = re.compile(r"DESIGN\.md\s+(?:Secs?\.?\s*)?(\d+)")
+EXPERIMENTS_ANCHOR_RE = re.compile(r"EXPERIMENTS\.md\s+(?:§|Sec\.\s*)(\w+)")
+MD_MENTION_RE = re.compile(r"\b([A-Z][A-Z_]+\.md)\b")
+
+
+def scan_files():
+    for d in SCAN_DIRS:
+        yield from (ROOT / d).rglob("*.py")
+    for name in ROOT_MD_FILES:
+        p = ROOT / name
+        if p.exists():
+            yield p
+
+
+def main() -> int:
+    design = (ROOT / "DESIGN.md").read_text(encoding="utf-8")
+    experiments = (ROOT / "EXPERIMENTS.md").read_text(encoding="utf-8")
+    design_secs = set(re.findall(r"^##\s+Sec\.\s+(\d+)", design, re.M))
+    exp_headings = [l for l in experiments.splitlines()
+                    if l.startswith("#")]
+
+    errors = []
+    n_refs = 0
+    for path in scan_files():
+        text = path.read_text(encoding="utf-8")
+        rel = path.relative_to(ROOT)
+        for m in DESIGN_SEC_RE.finditer(text):
+            n_refs += 1
+            if m.group(1) not in design_secs:
+                errors.append(
+                    f"{rel}: DESIGN.md Sec. {m.group(1)} has no heading")
+        for m in EXPERIMENTS_ANCHOR_RE.finditer(text):
+            n_refs += 1
+            tag = m.group(1)
+            if not any(f"§{tag}" in h for h in exp_headings):
+                errors.append(
+                    f"{rel}: EXPERIMENTS.md §{tag} has no heading")
+        for m in MD_MENTION_RE.finditer(text):
+            name = m.group(1)
+            if name == "ISSUE.md":
+                continue    # per-PR task file, not a durable doc
+            n_refs += 1
+            if not (ROOT / name).exists():
+                errors.append(f"{rel}: {name} does not exist")
+
+    for line in errors:
+        print(f"DANGLING: {line}", file=sys.stderr)
+    print(f"check_docs: {n_refs} references checked, "
+          f"{len(errors)} dangling")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
