@@ -1,70 +1,122 @@
 """Beyond-paper (Sec. 4 'future work'): Random Fourier Features make the
 kernel learner's model fixed-size, so the dynamic protocol communicates
-like the *linear* case while keeping near-kernel accuracy."""
+like the *linear* case while keeping near-kernel accuracy.
+
+Since the substrate layer (DESIGN.md Sec. 8) this suite runs entirely
+through the unified scan engine: the SV baseline and every RFF
+configuration share ONE generic ``engine.run`` / ``engine.sweep`` code
+path (no private Python driver loop), and the asynchronous harness row
+shows the identical substrate running event-driven.
+
+Registered claims (asserted here, grepped by CI):
+
+- ``bytes_per_sync_const`` — every RFF synchronization costs exactly
+  2 m (D+1) B bytes, independent of the rounds seen (Cor. 8 strict
+  adaptivity; the SV ledger has no such guarantee).
+- ``rff_cheaper_than_sv`` — at D=128 the RFF dynamic run moves fewer
+  total bytes than the budget-128 SV dynamic run on the same stream.
+
+The us_per_call column is per-round wall time of the warmed engine
+(rounds/sec); engine-vs-legacy-loop timing methodology lives in
+benchmarks/bench_engine.py (EXPERIMENTS.md §Engine).
+"""
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import protocol, rff, simulation
+from repro.core import engine
+from repro.core.accounting import sync_bytes_linear
 from repro.core.learners import LearnerConfig
 from repro.core.protocol import ProtocolConfig
+from repro.core.rff import RFFSpec
 from repro.core.rkhs import KernelSpec
+from repro.core.substrate import RFFSubstrate
 from repro.data import susy_stream
+from repro.runtime import AsyncProtocolConfig, SystemConfig, run_async_simulation
 
 from .common import Row
 
 T, M, D_IN = 600, 4, 8
 
 
-def _run_rff(spec, X, Y, pcfg, eta=0.5, lam=0.01):
-    W, b = rff.rff_params(spec)
-    update = rff.make_update(spec, W, b, eta=eta, lam=lam, loss="hinge")
-    m = X.shape[1]
-    states = [rff.init_state(spec) for _ in range(m)]
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
-    step = jax.jit(protocol.make_protocol_step(pcfg, update))
-    pstate = protocol.init_state(rff.init_state(spec), m)
-    total_err = 0.0
-    vpred = jax.jit(jax.vmap(
-        lambda s, x: s.w @ rff.featurize(spec, W, b, x[None])[0] + s.b))
-    for t in range(X.shape[0]):
-        xb, yb = jnp.asarray(X[t]), jnp.asarray(Y[t])
-        yhat = vpred(stacked, xb)
-        total_err += float(jnp.sum(jnp.sign(yhat) != yb))
-        stacked, pstate, _ = step(stacked, pstate, (xb, yb))
-    return total_err, float(pstate.bytes_sent), int(pstate.syncs)
+def _time_run(sub_or_cfg, pcfg, X, Y, reps=3):
+    engine.run(sub_or_cfg, pcfg, X, Y)           # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        res = engine.run(sub_or_cfg, pcfg, X, Y)
+    wall = (time.perf_counter() - t0) / reps
+    return res, wall * 1e6 / X.shape[0]          # us per round
 
 
 def run(quick: bool = False):
     t = 150 if quick else T
     X, Y = susy_stream(T=t, m=M, d=D_IN, seed=0)
+    pcfg = ProtocolConfig(kind="dynamic", delta=2.0)
     rows = []
 
-    # SV-expansion kernel learner (dynamic)
+    # SV-expansion kernel learner (dynamic) through the same engine
     lcfg = LearnerConfig(algo="kernel_sgd", loss="hinge", eta=0.5, lam=0.01,
                          budget=128, kernel=KernelSpec("gaussian", gamma=0.3),
                          dim=D_IN)
-    t0 = time.perf_counter()
-    res_sv = simulation.run_kernel_simulation(
-        lcfg, ProtocolConfig(kind="dynamic", delta=2.0), X, Y)
-    w_sv = (time.perf_counter() - t0) * 1e6 / t
-    rows.append(Row("rff/sv_expansion_dynamic", w_sv,
+    res_sv, us_sv = _time_run(lcfg, pcfg, X, Y)
+    rows.append(Row("rff/sv_expansion_dynamic", us_sv,
                     f"errors={int(res_sv.cumulative_errors[-1])};"
                     f"bytes={res_sv.total_bytes}"))
 
-    # RFF learner (dynamic): fixed-size model
+    # RFF learner (dynamic): fixed-size model, same engine code path
+    res_by_D = {}
     for D in (128, 512):
-        spec = rff.RFFSpec(dim=D_IN, num_features=D, gamma=0.3, seed=0)
-        t0 = time.perf_counter()
-        err, bts, syncs = _run_rff(spec, X, Y,
-                                   ProtocolConfig(kind="dynamic", delta=2.0))
-        wall = (time.perf_counter() - t0) * 1e6 / t
-        rows.append(Row(f"rff/rff{D}_dynamic", wall,
-                        f"errors={int(err)};bytes={int(bts)};syncs={syncs}"))
+        sub = RFFSubstrate(spec=RFFSpec(dim=D_IN, num_features=D, gamma=0.3,
+                                        seed=0))
+        res, us = _time_run(sub, pcfg, X, Y)
+        res_by_D[D] = res
+        per_sync = sync_bytes_linear(D + 1, M)
+        round_bytes = np.diff(np.concatenate([[0], res.cumulative_bytes]))
+        nz = round_bytes[round_bytes > 0]
+        bytes_const = bool(len(nz) == 0 or (nz == per_sync).all())
+        assert bytes_const, f"RFF per-sync bytes not constant: {set(nz)}"
+        assert res.total_bytes == res.num_syncs * per_sync
+        rows.append(Row(
+            f"rff/rff{D}_dynamic", us,
+            f"errors={int(res.cumulative_errors[-1])};"
+            f"bytes={res.total_bytes};syncs={res.num_syncs};"
+            f"bytes_per_sync_const={bytes_const}"))
+
+    cheaper = bool(res_by_D[128].total_bytes < res_sv.total_bytes)
+    assert cheaper, (
+        f"RFF-128 moved {res_by_D[128].total_bytes} bytes vs SV "
+        f"{res_sv.total_bytes}")
+    rows.append(Row("rff/bytes_vs_sv", 0.0,
+                    f"rff128_bytes={res_by_D[128].total_bytes};"
+                    f"sv_bytes={res_sv.total_bytes};"
+                    f"rff_cheaper_than_sv={cheaper}"))
+
+    # delta sweep, one compilation (engine.sweep over the RFF substrate)
+    sub = RFFSubstrate(spec=RFFSpec(dim=D_IN, num_features=128, gamma=0.3,
+                                    seed=0))
+    grid = [ProtocolConfig(kind="dynamic", delta=dl)
+            for dl in (0.5, 1.0, 2.0, 4.0)]
+    engine.sweep(sub, grid, X, Y)                # compile
+    t0 = time.perf_counter()
+    sw = engine.sweep(sub, grid, X, Y)
+    us_sweep = (time.perf_counter() - t0) * 1e6 / (t * len(grid))
+    rows.append(Row("rff/delta_sweep4", us_sweep,
+                    "syncs=" + "/".join(str(r.num_syncs)
+                                        for r in sw.results)))
+
+    # the identical substrate through the async event-driven harness
+    res_a = run_async_simulation(
+        sub, AsyncProtocolConfig(kind="dynamic", delta=2.0), X, Y,
+        sys_cfg=SystemConfig(), record_divergence=False)
+    per_sync = sync_bytes_linear(sub.num_params, M)
+    async_const = bool(res_a.total_bytes == res_a.num_syncs * per_sync)
+    assert async_const
+    rows.append(Row("rff/rff128_async_dynamic", 0.0,
+                    f"errors={int(res_a.cumulative_errors[-1])};"
+                    f"bytes={res_a.total_bytes};syncs={res_a.num_syncs};"
+                    f"bytes_per_sync_const={async_const}"))
     return rows
 
 

@@ -8,17 +8,27 @@
 - accounting:  byte-exact communication model of Sec. 3.
 - criterion:   Def. 1 efficiency audit + theorem-level bound checks.
 - simulation:  serial m-learner + coordinator experiment driver (oracle).
-- engine:      device-resident lax.scan driver + protocol-grid sweep.
-- rff:         Random Fourier Features learner (Sec. 4 future work).
+- substrate:   the learner-substrate layer (SV / RFF / linear behind one
+               protocol-facing interface, reference or Pallas backend).
+- engine:      device-resident lax.scan driver + protocol-grid sweep,
+               one generic scan core over any substrate.
+- rff:         Random Fourier Features map + learner state (Sec. 4
+               future work; protocol integration via RFFSubstrate).
 """
 from . import (accounting, compression, criterion, engine, learners, protocol,
-               rff, rkhs, simulation)
+               rff, rkhs, simulation, substrate)
 from .learners import LearnerConfig
 from .protocol import ProtocolConfig, ProtocolState
+from .rff import RFFSpec
 from .rkhs import KernelSpec, SVModel
+from .substrate import (LinearSubstrate, RFFSubstrate, Substrate, SVSubstrate,
+                        substrate_of)
 
 __all__ = [
     "accounting", "compression", "criterion", "engine", "learners", "protocol",
-    "rff", "rkhs", "simulation",
-    "LearnerConfig", "ProtocolConfig", "ProtocolState", "KernelSpec", "SVModel",
+    "rff", "rkhs", "simulation", "substrate",
+    "LearnerConfig", "ProtocolConfig", "ProtocolState", "KernelSpec",
+    "SVModel", "RFFSpec",
+    "Substrate", "SVSubstrate", "RFFSubstrate", "LinearSubstrate",
+    "substrate_of",
 ]

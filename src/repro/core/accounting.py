@@ -80,8 +80,32 @@ def sync_bytes_kernel(
 
 
 def sync_bytes_linear(num_params: int, m: int, dtype_bytes: int = 4) -> int:
-    """m uploads + m downloads of a fixed-size weight vector."""
+    """m uploads + m downloads of a fixed-size weight vector.
+
+    This is also the RFF substrate's cost with num_params = D + 1: a
+    random-feature model is a fixed-size primal vector, so per-sync
+    bytes are independent of the rounds seen (Cor. 8 strict
+    adaptivity — the paper's Sec. 4 'future work' case).
+    """
     return 2 * m * num_params * dtype_bytes
+
+
+# -- per-message payload sizing (used by the async transport and the
+#    substrate layer's upload/download accounting) --------------------------
+
+
+def kernel_payload_bytes(bm: ByteModel, send_ids: set,
+                         receiver_known: set) -> int:
+    """Bytes to ship an expansion over ``send_ids`` to a receiver that
+    already caches ``receiver_known``: every coefficient, only novel
+    support vectors (the Sec. 3 delta encoding per link)."""
+    return (len(send_ids) * bm.B_alpha
+            + len(send_ids - receiver_known) * bm.B_x)
+
+
+def linear_payload_bytes(num_params: int, dtype_bytes: int = 4) -> int:
+    """Dense weight vectors have no identity structure: full re-send."""
+    return num_params * dtype_bytes
 
 
 def allreduce_bytes(num_params: int, m: int, dtype_bytes: int = 4) -> int:

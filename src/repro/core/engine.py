@@ -8,20 +8,31 @@ one ``jax.lax.scan``: the carry holds (stacked learner states,
 reference model, device byte ledger), every per-round observable
 (loss, errors, bytes, divergence, sync flag, compression eps) comes
 back as a T-length output array, and the host touches data exactly once
-at the end.  The Sec. 3 byte accounting runs inside the scan through
-``accounting.DeviceLedger`` (sorted-id set algebra over fixed-budget
-``sv_id`` arrays) and reproduces the host ``CommunicationLedger``
-byte-for-byte (tests/test_engine.py).
+at the end.
+
+There is ONE scan core.  Everything representation-specific — how a
+model predicts, updates, averages, measures distance to the reference,
+and what a synchronization costs in Sec. 3 bytes — lives behind the
+``core.substrate.Substrate`` interface (DESIGN.md Sec. 8), so the same
+compiled step serves support-vector expansions (``SVSubstrate`` with
+the jit-resident ``accounting.DeviceLedger`` set algebra), random
+Fourier feature models (``RFFSubstrate``: fixed O(m D) bytes per sync),
+and the paper's linear baselines (``LinearSubstrate``).  ``run`` /
+``sweep`` accept a ``LearnerConfig`` (resolved via
+``substrate.substrate_of``), an ``RFFSpec``, or a ``Substrate``.
 
 ``sweep`` vmaps the whole simulation across a grid of ProtocolConfigs
 (delta / period / mini_batch) and optionally per-config data streams
-(seeds), one compilation per protocol kind — the grid-evaluation
-workload of Kamp et al.'s adaptive-bounds protocol family.
+(seeds), one compilation per (substrate, protocol kind) — the
+grid-evaluation workload of Kamp et al.'s adaptive-bounds protocol
+family, including mixed-substrate grids (e.g. SV vs RFF vs linear on
+the same stream).
 
-Static vs. traced configuration: the protocol ``kind`` changes the
-structure of the scan body (what is computed each round), so it is a
-compile-time specialization; ``delta``, ``period`` and ``mini_batch``
-are traced scalars, so one compiled executable serves a whole grid.
+Static vs. traced configuration: the protocol ``kind`` and the
+substrate change the structure of the scan body (what is computed each
+round), so they are compile-time specializations; ``delta``, ``period``
+and ``mini_batch`` are traced scalars, so one compiled executable
+serves a whole grid.
 
 Exactness contract against the legacy serial driver:
 
@@ -32,26 +43,29 @@ Exactness contract against the legacy serial driver:
 - the RKHS divergence series delta(f_t) is the one observable whose
   *recording* costs a full union Gram every round, and nothing in the
   protocol consumes it — so it is opt-in (``record_divergence=True``;
-  linear simulations always record it, the cost there is O(m d)).
+  substrates with ``free_divergence`` — linear, RFF — always record it,
+  the cost there is O(m d)).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, NamedTuple, Optional, Sequence
+from typing import List, NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from . import accounting, compression, learners, rkhs
+from . import substrate as substrate_mod
 from .learners import LearnerConfig
 from .protocol import PROTOCOL_KIND_CODES, ProtocolConfig
-from .rkhs import SVModel
 from .simulation import SimResult
+from .substrate import Substrate
 
 Array = jnp.ndarray
+
+LearnerLike = Union[Substrate, LearnerConfig, "substrate_mod.RFFSpec"]
 
 
 class ScanParams(NamedTuple):
@@ -88,49 +102,26 @@ def _err_of(loss: str, yhat: Array, y: Array) -> Array:
 
 
 # ---------------------------------------------------------------------------
-# Kernel-learner scan core
+# The one generic scan core, parameterized by substrate
 # ---------------------------------------------------------------------------
 
 
-def _kernel_core(lcfg: LearnerConfig, kind: str, sync_budget: int,
-                 compress_method: str, record_divergence: bool):
-    spec = lcfg.kernel
-    tau = lcfg.budget
-
+def _scan_core(sub: Substrate, kind: str, record_divergence: bool):
     def simulate(params: ScanParams, X: Array, Y: Array):
         T, m, d = X.shape
-        bm = accounting.ByteModel(dim=d)
-        states = [learners.init_state(lcfg, i) for i in range(m)]
-        stacked0 = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
-
-        def make_sync(models: SVModel):
-            fbar = rkhs.average_stacked(models)          # budget m*tau
-            return compression.compress(spec, fbar, sync_budget,
-                                        compress_method)
-
-        ref0, _ = make_sync(stacked0.model)
-        ledger0 = accounting.device_ledger_init(m * tau)
-
-        vupdate = jax.vmap(functools.partial(learners.update, lcfg))
-        vpredict = jax.vmap(lambda f, x: rkhs.predict(spec, f, x[None])[0])
-
-        def adopt(models: SVModel, fsync: SVModel) -> SVModel:
-            one = rkhs.pad_to_budget(fsync, tau)
-            return SVModel(
-                sv=jnp.broadcast_to(one.sv[None], models.sv.shape),
-                alpha=jnp.broadcast_to(one.alpha[None], models.alpha.shape),
-                sv_id=jnp.broadcast_to(one.sv_id[None], models.sv_id.shape),
-            )
+        state0 = sub.init(m)
+        ref0, _ = sub.average_stacked(sub.models_of(state0))
+        ledger0 = sub.ledger_init(m)
 
         def step(carry, xs):
             state, reference, ledger = carry
             x, y, t = xs
 
-            yhat = vpredict(state.model, x)
-            err = _err_of(lcfg.loss, yhat, y)
-            state, losses = vupdate(state, (x, y))
+            yhat = sub.predict(sub.models_of(state), x)
+            err = _err_of(sub.loss, yhat, y)
+            state, losses = sub.update(state, (x, y))
             loss = jnp.sum(losses)
-            models = state.model
+            models = sub.models_of(state)
 
             if kind == "none":
                 do_sync = jnp.zeros((), bool)
@@ -140,13 +131,18 @@ def _kernel_core(lcfg: LearnerConfig, kind: str, sync_budget: int,
                 do_sync = ((t + 1) % params.period) == 0
             else:  # dynamic: check local conditions every mini_batch rounds
                 check_now = ((t + 1) % params.mini_batch) == 0
+                if sub.guarded_dist_check:
+                    # the distance costs a Gram — only pay it on check
+                    # rounds (lax.cond skips the untaken branch)
+                    def check(_):
+                        dists = sub.dist_to_ref(models, reference)
+                        return jnp.any(dists > params.delta)
 
-                def check(_):
-                    dists = rkhs.stacked_dist_to(spec, models, reference)
-                    return jnp.any(dists > params.delta)
-
-                do_sync = lax.cond(check_now, check,
-                                   lambda _: jnp.zeros((), bool), None)
+                    do_sync = lax.cond(check_now, check,
+                                       lambda _: jnp.zeros((), bool), None)
+                else:
+                    dists = sub.dist_to_ref(models, reference)
+                    do_sync = check_now & jnp.any(dists > params.delta)
 
             if kind == "none":
                 new_models, new_ref, new_ledger = models, reference, ledger
@@ -156,108 +152,32 @@ def _kernel_core(lcfg: LearnerConfig, kind: str, sync_budget: int,
 
                 def sync_branch(args):
                     models, reference, ledger = args
-                    fsync, eps = make_sync(models)
-                    nbytes, new_ledger = accounting.device_sync_bytes_kernel(
-                        bm, models.sv_id, ledger)
-                    return adopt(models, fsync), fsync, new_ledger, nbytes, eps
+                    fsync, eps = sub.average_stacked(models)
+                    nbytes, new_ledger = sub.sync_payload(models, ledger)
+                    return (sub.adopt(models, fsync), fsync, new_ledger,
+                            jnp.asarray(nbytes, jnp.int32),
+                            jnp.asarray(eps, jnp.float32))
 
                 def keep_branch(args):
                     models, reference, ledger = args
                     return (models, reference, ledger,
-                            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+                            jnp.zeros((), jnp.int32),
+                            jnp.zeros((), jnp.float32))
 
                 new_models, new_ref, new_ledger, nbytes, eps = lax.cond(
                     do_sync, sync_branch, keep_branch,
                     (models, reference, ledger))
 
-            state = state._replace(model=new_models)
-            if record_divergence:
-                div = rkhs.divergence_stacked(spec, state.model)
+            state = sub.with_models(state, new_models)
+            if record_divergence or sub.free_divergence:
+                div = sub.divergence(sub.models_of(state))
             else:
                 div = jnp.zeros((), jnp.float32)
             out = (loss, err, nbytes, div, do_sync, eps)
             return (state, new_ref, new_ledger), out
 
         ts = jnp.arange(T, dtype=jnp.int32)
-        _, outs = lax.scan(step, (stacked0, ref0, ledger0), (X, Y, ts))
-        return outs
-
-    return simulate
-
-
-# ---------------------------------------------------------------------------
-# Linear-learner scan core
-# ---------------------------------------------------------------------------
-
-
-def _linear_core(lcfg: LearnerConfig, kind: str):
-    def simulate(params: ScanParams, X: Array, Y: Array):
-        T, m, d = X.shape
-        bytes_per_sync = accounting.sync_bytes_linear(d + 1, m)
-        states = [learners.init_state(lcfg, i) for i in range(m)]
-        stacked0 = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
-
-        def avg(st):
-            return learners.LinearLearnerState(
-                w=jnp.mean(st.w, axis=0), b=jnp.mean(st.b))
-
-        ref0 = avg(stacked0)
-        vupdate = jax.vmap(functools.partial(learners.update, lcfg))
-        vpredict = jax.vmap(lambda s, x: s.w @ x + s.b)
-
-        def step(carry, xs):
-            state, reference = carry
-            x, y, t = xs
-
-            yhat = vpredict(state, x)
-            err = _err_of(lcfg.loss, yhat, y)
-            state, losses = vupdate(state, (x, y))
-            loss = jnp.sum(losses)
-
-            if kind == "none":
-                do_sync = jnp.zeros((), bool)
-            elif kind == "continuous":
-                do_sync = jnp.ones((), bool)
-            elif kind == "periodic":
-                do_sync = ((t + 1) % params.period) == 0
-            else:
-                check_now = ((t + 1) % params.mini_batch) == 0
-                dists = jax.vmap(
-                    lambda s: jnp.sum((s.w - reference.w) ** 2)
-                    + (s.b - reference.b) ** 2)(state)
-                do_sync = check_now & jnp.any(dists > params.delta)
-
-            if kind == "none":
-                new_state, new_ref = state, reference
-                nbytes = jnp.zeros((), jnp.int32)
-            else:
-
-                def sync_branch(args):
-                    state, reference = args
-                    mean = avg(state)
-                    synced = learners.LinearLearnerState(
-                        w=jnp.broadcast_to(mean.w[None], state.w.shape),
-                        b=jnp.broadcast_to(mean.b[None], state.b.shape))
-                    return synced, mean
-
-                def keep_branch(args):
-                    return args
-
-                new_state, new_ref = lax.cond(
-                    do_sync, sync_branch, keep_branch, (state, reference))
-                nbytes = jnp.where(do_sync, bytes_per_sync, 0).astype(jnp.int32)
-
-            state = new_state
-            wbar = jnp.mean(state.w, axis=0)
-            bbar = jnp.mean(state.b)
-            div = jnp.mean(jnp.sum((state.w - wbar) ** 2, -1)
-                           + (state.b - bbar) ** 2)
-            out = (loss, err, nbytes, div, do_sync,
-                   jnp.zeros((), jnp.float32))
-            return (state, new_ref), out
-
-        ts = jnp.arange(T, dtype=jnp.int32)
-        _, outs = lax.scan(step, (stacked0, ref0), (X, Y, ts))
+        _, outs = lax.scan(step, (state0, ref0, ledger0), (X, Y, ts))
         return outs
 
     return simulate
@@ -269,20 +189,16 @@ def _linear_core(lcfg: LearnerConfig, kind: str):
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted(lcfg: LearnerConfig, kind: str, sync_budget: int,
-            compress_method: str, record_divergence: bool,
+def _jitted(sub: Substrate, kind: str, record_divergence: bool,
             vmapped: bool, data_batched: bool):
     """One jitted (optionally vmapped) simulate fn per static config.
 
     The cache is what lets benchmarks call ``run`` in a timing loop
     without re-tracing: jax.jit caches on function identity, so the
-    closure must be built once per static configuration.
+    closure must be built once per static configuration.  Substrates
+    are frozen dataclasses, so they key the cache directly.
     """
-    if lcfg.is_kernel:
-        core = _kernel_core(lcfg, kind, sync_budget, compress_method,
-                            record_divergence)
-    else:
-        core = _linear_core(lcfg, kind)
+    core = _scan_core(sub, kind, record_divergence)
     if vmapped:
         dax = 0 if data_batched else None
         core = jax.vmap(core, in_axes=(ScanParams(0, 0, 0), dax, dax))
@@ -290,32 +206,39 @@ def _jitted(lcfg: LearnerConfig, kind: str, sync_budget: int,
 
 
 def run(
-    lcfg: LearnerConfig,
+    learner: LearnerLike,
     pcfg: ProtocolConfig,
     X: np.ndarray,          # (T, m, d)
     Y: np.ndarray,          # (T, m)
     *,
     sync_budget: Optional[int] = None,
-    compress_method: str = "truncate",
+    compress_method: Optional[str] = None,   # default "truncate"
     record_divergence: bool = False,
+    backend: Optional[str] = None,           # default "reference"
 ) -> SimResult:
     """Run T rounds of m learners under pcfg, fully on device.
 
-    Drop-in replacement for ``simulation.run_kernel_simulation`` /
-    ``run_linear_simulation`` (dispatches on ``lcfg.is_kernel``) with
-    the exactness contract in the module docstring.
+    ``learner`` is a Substrate, a LearnerConfig, or an RFFSpec (see
+    ``substrate.substrate_of`` — explicitly passed keywords override a
+    Substrate's own configuration).  Drop-in replacement for
+    ``simulation.run_kernel_simulation`` / ``run_linear_simulation``
+    with the exactness contract in the module docstring.
     """
-    sb = int(sync_budget or lcfg.budget)
-    fn = _jitted(lcfg, pcfg.kind, sb, compress_method,
-                 bool(record_divergence), False, False)
+    sub = substrate_mod.substrate_of(
+        learner, sync_budget=sync_budget, compress_method=compress_method,
+        backend=backend)
+    X = np.asarray(X)
+    T, m, d = X.shape
+    sub.validate(T, m, d)
+    fn = _jitted(sub, pcfg.kind, bool(record_divergence), False, False)
     outs = fn(_params_of(pcfg), jnp.asarray(X), jnp.asarray(Y))
     loss, err, nbytes, div, flags, eps = (np.asarray(o) for o in outs)
-    keep_div = record_divergence or not lcfg.is_kernel
+    keep_div = record_divergence or sub.free_divergence
     return SimResult.from_round_series(
         loss, err, nbytes,
         div if keep_div else np.zeros((0,)),
         flags,
-        eps if lcfg.is_kernel else np.zeros((0,)))
+        eps if sub.has_eps else np.zeros((0,)))
 
 
 @dataclasses.dataclass
@@ -333,7 +256,7 @@ class SweepResult:
     round_bytes: np.ndarray   # (n, T)
     sync_flags: np.ndarray    # (n, T) bool
     divergences: Optional[np.ndarray]  # (n, T) or None (not recorded)
-    eps: Optional[np.ndarray]          # (n, T) or None (linear learners)
+    eps: Optional[np.ndarray]          # (n, T) or None (eps-free substrates)
 
     def __len__(self) -> int:
         return len(self.configs)
@@ -352,27 +275,43 @@ class SweepResult:
 
 
 def sweep(
-    lcfg: LearnerConfig,
+    learner: Union[LearnerLike, Sequence[LearnerLike]],
     pcfgs: Sequence[ProtocolConfig],
     X: np.ndarray,          # (T, m, d) shared, or (n, T, m, d) per config
     Y: np.ndarray,          # (T, m) shared, or (n, T, m)
     *,
     sync_budget: Optional[int] = None,
-    compress_method: str = "truncate",
+    compress_method: Optional[str] = None,   # default "truncate"
     record_divergence: bool = False,
+    backend: Optional[str] = None,           # default "reference"
 ) -> SweepResult:
     """Simulate a grid of protocol configurations in one compilation.
 
     The whole simulation (scan over T rounds, ledger included) is
-    vmapped across the config axis; configs are grouped by ``kind`` so
-    each group shares one compiled executable regardless of its delta /
-    period / mini_batch values.  Pass X with a leading config axis to
-    sweep seeds (per-config data streams) at the same time.
+    vmapped across the config axis; configs are grouped by
+    (substrate, kind) so each group shares one compiled executable
+    regardless of its delta / period / mini_batch values.  ``learner``
+    may also be a sequence of per-config substrates (same length as
+    ``pcfgs``) for mixed-substrate grids — e.g. SV vs RFF vs linear on
+    the same stream.  Pass X with a leading config axis to sweep seeds
+    (per-config data streams) at the same time.
     """
     pcfgs = list(pcfgs)
     n = len(pcfgs)
     if n == 0:
         raise ValueError("sweep needs at least one ProtocolConfig")
+    if isinstance(learner, (list, tuple)):
+        if len(learner) != n:
+            raise ValueError(
+                f"{len(learner)} substrates != {n} protocol configs")
+        subs = [substrate_mod.substrate_of(
+            s, sync_budget=sync_budget, compress_method=compress_method,
+            backend=backend) for s in learner]
+    else:
+        one = substrate_mod.substrate_of(
+            learner, sync_budget=sync_budget, compress_method=compress_method,
+            backend=backend)
+        subs = [one] * n
     X = np.asarray(X)
     Y = np.asarray(Y)
     data_batched = X.ndim == 4
@@ -380,8 +319,10 @@ def sweep(
         raise ValueError(
             f"per-config data axis {X.shape[0]} != n_configs {n}")
     T = X.shape[1] if data_batched else X.shape[0]
-    sb = int(sync_budget or lcfg.budget)
-    is_kernel = lcfg.is_kernel
+    m = X.shape[2] if data_batched else X.shape[1]
+    d = X.shape[3] if data_batched else X.shape[2]
+    for sub in set(subs):
+        sub.validate(T, m, d)
 
     losses = np.zeros((n, T), np.float32)
     errors = np.zeros((n, T), np.float32)
@@ -390,14 +331,14 @@ def sweep(
     divs = np.zeros((n, T), np.float32)
     eps = np.zeros((n, T), np.float32)
 
-    by_kind: dict = {}
-    for i, p in enumerate(pcfgs):
-        by_kind.setdefault(p.kind, []).append(i)
+    by_group: dict = {}
+    for i, (s, p) in enumerate(zip(subs, pcfgs)):
+        by_group.setdefault((s, p.kind), []).append(i)
 
-    for kind, idx in sorted(by_kind.items(),
-                            key=lambda kv: PROTOCOL_KIND_CODES[kv[0]]):
-        fn = _jitted(lcfg, kind, sb, compress_method,
-                     bool(record_divergence), True, data_batched)
+    for (sub, kind), idx in sorted(
+            by_group.items(),
+            key=lambda kv: (PROTOCOL_KIND_CODES[kv[0][1]], repr(kv[0][0]))):
+        fn = _jitted(sub, kind, bool(record_divergence), True, data_batched)
         params = _stack_params([pcfgs[i] for i in idx])
         Xg = jnp.asarray(X[idx]) if data_batched else jnp.asarray(X)
         Yg = jnp.asarray(Y[idx]) if data_batched else jnp.asarray(Y)
@@ -406,7 +347,8 @@ def sweep(
         losses[idx], errors[idx], flags[idx] = lo, er, fl
         round_bytes[idx], divs[idx], eps[idx] = nb, dv, ep
 
-    keep_div = record_divergence or not is_kernel
+    keep_div = record_divergence or all(s.free_divergence for s in subs)
+    keep_eps = any(s.has_eps for s in subs)
     return SweepResult(
         configs=pcfgs,
         losses=losses,
@@ -414,5 +356,5 @@ def sweep(
         round_bytes=round_bytes,
         sync_flags=flags,
         divergences=divs if keep_div else None,
-        eps=eps if is_kernel else None,
+        eps=eps if keep_eps else None,
     )

@@ -49,6 +49,35 @@ Array = jnp.ndarray
 # support-vector ids (id = counter * MAX_LEARNERS + learner_id).
 MAX_LEARNERS = 4096
 
+# sv_ids are minted in int32 (the dtype of rkhs.SVModel.sv_id and of the
+# whole sorted-id set algebra behind the byte ledger: rkhs.sorted_unique
+# pads with ID_SENTINEL = int32 max, accounting.DeviceLedger stores
+# int32 arrays).  With id = counter * MAX_LEARNERS + learner_id the
+# counter may not exceed this bound or the id wraps negative and the
+# slot silently reads as *empty*, corrupting the Sec. 3 accounting.
+# The counter increments at most once per processed example, so any
+# driver can enforce the bound up front from its round count T via
+# ``check_id_capacity`` (engine.run/sweep, the serial oracle, and the
+# async harness all do).  Minting in int64 instead would need
+# jax_enable_x64, which the launchers keep off — so the bound is
+# guarded, not widened: ~524k insertions per learner.
+MAX_INSERTIONS_PER_LEARNER = (2**31 - 1) // MAX_LEARNERS
+
+
+def check_id_capacity(num_rounds: int) -> None:
+    """Refuse runs long enough to wrap the int32 sv_id space.
+
+    ``num_rounds`` is an upper bound on any learner's insertion counter
+    (one insertion per lossy round).  Raises ValueError beyond
+    ``MAX_INSERTIONS_PER_LEARNER``.
+    """
+    if num_rounds > MAX_INSERTIONS_PER_LEARNER:
+        raise ValueError(
+            f"{num_rounds} rounds can mint sv_ids past int32 "
+            f"(counter * MAX_LEARNERS + learner_id wraps after "
+            f"{MAX_INSERTIONS_PER_LEARNER} insertions per learner); "
+            "shard the stream into shorter runs")
+
 
 @dataclasses.dataclass(frozen=True)
 class LearnerConfig:
@@ -102,8 +131,9 @@ class LinearLearnerState(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
-def _loss_and_grad(loss: str, yhat: Array, y: Array) -> Tuple[Array, Array]:
-    """Returns (ell, dell/dyhat)."""
+def loss_and_grad(loss: str, yhat: Array, y: Array) -> Tuple[Array, Array]:
+    """Returns (ell, dell/dyhat).  Shared by the learners here and the
+    primal substrates (core/substrate.py)."""
     if loss == "hinge":
         ell = jnp.maximum(0.0, 1.0 - y * yhat)
         g = jnp.where(ell > 0.0, -y, 0.0)
@@ -111,6 +141,9 @@ def _loss_and_grad(loss: str, yhat: Array, y: Array) -> Tuple[Array, Array]:
     # squared
     r = yhat - y
     return 0.5 * r * r, r
+
+
+_loss_and_grad = loss_and_grad
 
 
 # ---------------------------------------------------------------------------

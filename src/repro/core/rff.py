@@ -13,9 +13,12 @@ approximates the Gaussian kernel k(x, y) = exp(-gamma ||x-y||^2) via
 E[phi(x).phi(y)] = k(x, y).
 
 This module provides the feature map (the Pallas-fused path lives in
-repro.kernels) and an RFF learner state compatible with the linear
-protocol machinery, closing the paper's open question empirically
-(benchmarks/bench_rff.py).
+repro.kernels.ops.rff_features) and the RFF learner state.  Protocol
+integration — the scan engine, the async runtime, sweeps, and the
+Sec. 3 byte accounting — goes through ``substrate.RFFSubstrate``
+(DESIGN.md Sec. 8), which closes the paper's open question empirically
+(benchmarks/bench_rff.py).  ``make_update`` stays as the standalone
+reference update the substrate is tested against.
 """
 from __future__ import annotations
 

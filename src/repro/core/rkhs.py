@@ -16,7 +16,12 @@ Every support vector carries a globally unique integer id (assigned by
 the learner at insertion time).  Ids make the *union* of support sets
 (Prop. 2) well defined under the fixed-budget representation and drive
 the byte-exact communication accounting of Sec. 3 (a vector already
-known to the coordinator is never re-transmitted).
+known to the coordinator is never re-transmitted).  Ids are int32
+everywhere — the expansions here, the sorted-id set algebra below, and
+``accounting.DeviceLedger`` — and the minting scheme in core/learners
+bounds runs to ``learners.MAX_INSERTIONS_PER_LEARNER`` insertions per
+learner so an id can never wrap negative (which would silently read as
+an empty slot).
 """
 from __future__ import annotations
 

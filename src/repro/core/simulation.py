@@ -109,6 +109,7 @@ def run_kernel_simulation(
     """
     T, m, d = X.shape
     assert d == lcfg.dim
+    learners.check_id_capacity(T)
     tau = lcfg.budget
     sync_budget = sync_budget or tau
     spec = lcfg.kernel

@@ -116,3 +116,31 @@ def rkhs_dist_sq(X, Y, alpha, beta, *, kind="gaussian", gamma=1.0,
         + quadform(Y, Y, beta, beta, **kw)
         - 2.0 * quadform(X, Y, alpha, beta, **kw)
     )
+
+
+# ---------------------------------------------------------------------------
+# KernelSpec-driven entry points (the substrate layer's pallas backend)
+# ---------------------------------------------------------------------------
+#
+# ``spec`` is duck-typed against core.rkhs.KernelSpec (kind / gamma /
+# degree / coef0) so this package stays import-independent of core.
+# These are what core.substrate dispatches to under backend="pallas"
+# (DESIGN.md Sec. 8).
+
+
+def gram_spec(spec, X, Y, **kw):
+    """K(X, Y) for a core.rkhs.KernelSpec."""
+    return gram(X, Y, kind=spec.kind, gamma=spec.gamma, degree=spec.degree,
+                coef0=spec.coef0, **kw)
+
+
+def quadform_spec(spec, X, Y, alpha, beta, **kw):
+    """alpha^T K(X, Y) beta for a core.rkhs.KernelSpec."""
+    return quadform(X, Y, alpha, beta, kind=spec.kind, gamma=spec.gamma,
+                    degree=spec.degree, coef0=spec.coef0, **kw)
+
+
+def rkhs_dist_sq_spec(spec, X, Y, alpha, beta):
+    """||f - g||_H^2 for a core.rkhs.KernelSpec (three fused quadforms)."""
+    return rkhs_dist_sq(X, Y, alpha, beta, kind=spec.kind, gamma=spec.gamma,
+                        degree=spec.degree, coef0=spec.coef0)

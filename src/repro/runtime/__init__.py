@@ -4,13 +4,15 @@
                   models; deterministic under seed.
 - transport:      delta-encoded messages metered with the Sec. 3
                   ByteModel; per-link byte/latency stats.
-- nodes:          LearnerNode (any core.learners update on its own
+- nodes:          LearnerNode (any core.substrate learner on its own
                   stream) and CoordinatorNode (staleness-weighted
                   aggregation, no global barrier).
-- async_protocol: async sigma_periodic / sigma_dynamic + the FedAsync
-                  staleness schedules alpha_t = alpha * s(t - tau).
+- async_protocol: async sigma_periodic / sigma_dynamic policy + the
+                  FedAsync staleness schedules alpha_t = alpha * s(t-tau)
+                  (the aggregation itself lives on the substrate).
 - harness:        driver producing SimResult-compatible AsyncSimResult
-                  so sync and async systems plot on the same axes.
+                  so sync and async systems plot on the same axes; runs
+                  any substrate (SV / RFF / linear, DESIGN.md Sec. 8).
 """
 from . import async_protocol, clock, harness, nodes, transport
 from .async_protocol import AsyncProtocolConfig, staleness_weight

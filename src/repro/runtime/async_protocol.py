@@ -1,4 +1,4 @@
-"""Asynchronous synchronization operators (DESIGN.md Sec. 6).
+"""Asynchronous synchronization policy (DESIGN.md Sec. 6).
 
 Asynchronous counterparts of ``core.protocol``'s sigma_periodic /
 sigma_dynamic.  The structural difference to the lockstep operators is
@@ -21,28 +21,21 @@ weight
 
 each arrived model k forms the candidate
 ``(1 - alpha_t^k) r + alpha_t^k f_k`` and the new reference is the
-plain average of the candidates, compressed back to the sync budget.
-With ``alpha = 1`` and the constant schedule every candidate collapses
-to its model and the update degenerates to the paper's Prop. 2 average
-over the arrived subset — which is why the zero-latency async run
-reproduces the serial simulator byte-for-byte (bench_async).
+plain average of the candidates.  With ``alpha = 1`` and the constant
+schedule every candidate collapses to its model and the update
+degenerates to the paper's Prop. 2 average over the arrived subset —
+which is why the zero-latency async run reproduces the serial
+simulator byte-for-byte (bench_async).
 
-In an RKHS the convex combination of two expansions is the
-concatenation of the coefficient-scaled expansions; exact-zero
-coefficients are pruned before compression so the degenerate alpha=1
-case produces the identical slot multiset as the serial average.
+The aggregation itself is representation-specific and lives on the
+substrate (``core.substrate.Substrate.aggregate`` — SV expansions
+concatenate coefficient-scaled slots and compress back to the sync
+budget; primal substrates mix in weight space).  This module owns only
+the *policy*: the protocol configuration and the staleness schedules.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Set, Tuple
-
-import jax.numpy as jnp
-import numpy as np
-
-from ..core import compression
-from ..core.learners import LinearLearnerState
-from ..core.rkhs import KernelSpec, SVModel
 
 
 # ---------------------------------------------------------------------------
@@ -110,84 +103,3 @@ def staleness_weight(cfg: AsyncProtocolConfig, lag: int) -> float:
     else:  # poly
         s = float((lag + 1) ** (-cfg.stale_a))
     return min(max(s, 1e-12), 1.0)
-
-
-# ---------------------------------------------------------------------------
-# Staleness-weighted aggregation
-# ---------------------------------------------------------------------------
-
-
-def _concat_sv(parts: Sequence[Tuple[SVModel, float]]) -> SVModel:
-    """Concatenate coefficient-scaled expansions; prune exact zeros.
-
-    Pruning (alpha == 0 -> slot inactive) keeps the degenerate
-    full-weight case bit-identical to ``rkhs.average_stacked``: the
-    reference's slots enter with weight exactly 0 and vanish, leaving
-    the same active-slot multiset in the same order.
-    """
-    svs, alphas, ids = [], [], []
-    for model, w in parts:
-        svs.append(np.asarray(model.sv))
-        alphas.append(np.asarray(model.alpha) * np.float32(w))
-        ids.append(np.asarray(model.sv_id))
-    sv = np.concatenate(svs, axis=0)
-    alpha = np.concatenate(alphas, axis=0).astype(np.float32)
-    sv_id = np.concatenate(ids, axis=0)
-    dead = (alpha == 0.0) | (sv_id < 0)
-    sv_id = np.where(dead, -1, sv_id)
-    sv = np.where(dead[:, None], 0.0, sv).astype(np.float32)
-    alpha = np.where(dead, 0.0, alpha)
-    return SVModel(sv=jnp.asarray(sv), alpha=jnp.asarray(alpha),
-                   sv_id=jnp.asarray(sv_id, jnp.int32))
-
-
-def aggregate_kernel(
-    spec: KernelSpec,
-    reference: SVModel,
-    models: Sequence[SVModel],
-    weights: Sequence[float],
-    sync_budget: int,
-    method: str = "truncate",
-) -> Tuple[SVModel, float, Set[int]]:
-    """Staleness-weighted RKHS aggregation.
-
-    candidate_k = (1 - w_k) r + w_k f_k ; the new reference is the mean
-    of the candidates compressed to ``sync_budget``.  Returns
-    (new_reference, compression epsilon, union of active sv_ids of the
-    *uncompressed* mixture — the Sbar the Sec. 3 download accounting
-    charges for).
-    """
-    n = len(models)
-    assert n == len(weights) and n > 0
-    parts: List[Tuple[SVModel, float]] = []
-    for f, w in zip(models, weights):
-        parts.append((reference, (1.0 - w)))
-        parts.append((f, w))
-    mix = _concat_sv(parts)
-    # mean over candidates: divide (not multiply by reciprocal) so the
-    # n == m full-weight case reproduces average_stacked's floats.
-    mix = mix._replace(alpha=mix.alpha / n)
-    union = set(int(i) for i in np.asarray(mix.sv_id) if i >= 0)
-    fsync, eps = compression.compress(spec, mix, sync_budget, method)
-    return fsync, float(eps), union
-
-
-def aggregate_linear(
-    reference: LinearLearnerState,
-    models: Sequence[LinearLearnerState],
-    weights: Sequence[float],
-) -> LinearLearnerState:
-    """Mean over candidates (1 - w_k) r + w_k f_k in weight space."""
-    n = len(models)
-    assert n == len(weights) and n > 0
-    w_acc = np.zeros_like(np.asarray(reference.w, np.float64))
-    b_acc = 0.0
-    rw = np.asarray(reference.w, np.float64)
-    rb = float(reference.b)
-    for st, wt in zip(models, weights):
-        w_acc += (1.0 - wt) * rw + wt * np.asarray(st.w, np.float64)
-        b_acc += (1.0 - wt) * rb + wt * float(st.b)
-    return LinearLearnerState(
-        w=jnp.asarray((w_acc / n).astype(np.float32)),
-        b=jnp.asarray(np.float32(b_acc / n)),
-    )

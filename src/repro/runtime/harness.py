@@ -1,10 +1,17 @@
 """Asynchronous experiment driver (DESIGN.md Sec. 6).
 
 Runs the same (stream, learner, kernel) workloads as
-``core.simulation`` through the event-driven runtime and reports the
-same ``SimResult`` fields — existing figure benchmarks compare the
-lockstep and asynchronous systems directly — plus async-only metrics
-(simulated wall-clock, per-link bytes, staleness statistics).
+``core.simulation`` and ``core.engine`` through the event-driven
+runtime and reports the same ``SimResult`` fields — existing figure
+benchmarks compare the lockstep and asynchronous systems directly —
+plus async-only metrics (simulated wall-clock, per-link bytes,
+staleness statistics).
+
+The learner may be anything ``core.substrate.substrate_of`` resolves —
+a ``LearnerConfig`` (SV or linear), an ``RFFSpec``, or a ``Substrate``
+instance — so every protocol kind x substrate x network model
+combination runs in both the serial engine and this runtime
+(DESIGN.md Sec. 8).
 
 Round-indexed series keep the serial driver's semantics: learners may
 reach round t at very different simulated times, but
@@ -20,17 +27,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..core import accounting, compression, learners, rkhs
-from ..core.learners import LearnerConfig
-from ..core.rkhs import SVModel, empty_model
+from ..core import accounting
 from ..core.simulation import SimResult
+from ..core.substrate import substrate_of
 from .async_protocol import AsyncProtocolConfig
 from .clock import Clock, SystemConfig, SystemModel, barrier_wall_clock
-from .nodes import CoordinatorNode, LearnerNode, make_kernel_ops
+from .nodes import CoordinatorNode, LearnerNode
 from .transport import Network
 
 
@@ -52,19 +56,20 @@ class AsyncSimResult(SimResult):
 
 
 def run_async_simulation(
-    lcfg: LearnerConfig,
+    learner,
     acfg: AsyncProtocolConfig,
     X: np.ndarray,              # (T, m, d)
     Y: np.ndarray,              # (T, m)
     sys_cfg: Optional[SystemConfig] = None,
     sync_budget: Optional[int] = None,
-    compress_method: str = "truncate",
+    compress_method: Optional[str] = None,   # default "truncate"
     record_divergence: bool = True,
     barrier_num_syncs: Optional[int] = None,
+    backend: Optional[str] = None,           # default "reference"
 ) -> AsyncSimResult:
     """Run T rounds of m learners under the asynchronous protocol.
 
-    record_divergence keeps per-round model snapshots — O(T m tau d)
+    record_divergence keeps per-round model snapshots — O(T m |model|)
     memory — because an async run has no global round boundary at
     which divergence could be computed streaming.  Matches the serial
     driver's always-on divergence series; pass False for large T.
@@ -74,8 +79,10 @@ def run_async_simulation(
     baseline pass the SERIAL simulator's sync count on the same
     workload (bench_async does); defaults to this run's own count.
     """
+    sub = substrate_of(learner, sync_budget=sync_budget,
+                       compress_method=compress_method, backend=backend)
     T, m, d = X.shape
-    assert d == lcfg.dim
+    sub.validate(T, m, d)
     sys_cfg = sys_cfg or SystemConfig()
     model = SystemModel(sys_cfg, m)
     compute_times = model.draw_compute(T)
@@ -87,45 +94,22 @@ def run_async_simulation(
     loss_out = np.zeros((T, m))
     err_out = np.zeros((T, m))
 
-    if lcfg.is_kernel:
-        tau = lcfg.budget
-        sync_budget = sync_budget or tau
-        spec = lcfg.kernel
-        ops = make_kernel_ops(lcfg)
-        # r_1: the (empty) compressed average, as in the serial driver
-        reference0, _ = compression.compress(
-            spec, empty_model(tau, d), sync_budget, compress_method)
-        snap_sv = np.zeros((T, m, tau, d), np.float32) if record_divergence else None
-        snap_alpha = np.zeros((T, m, tau), np.float32) if record_divergence else None
-        snap_id = -np.ones((T, m, tau), np.int32) if record_divergence else None
+    if record_divergence:
+        bufs = sub.snapshot_buffers(T, m)
 
-        def snapshot(t, i, f: SVModel):
-            if record_divergence:
-                snap_sv[t, i] = np.asarray(f.sv)
-                snap_alpha[t, i] = np.asarray(f.alpha)
-                snap_id[t, i] = np.asarray(f.sv_id)
+        def snapshot(t, i, f):
+            sub.write_snapshot(bufs, t, i, f)
     else:
-        ops = None
-        reference0 = learners.init_linear_state(lcfg)
-        snap_w = np.zeros((T, m, d), np.float32) if record_divergence else None
-        snap_b = np.zeros((T, m), np.float32) if record_divergence else None
+        snapshot = None
 
-        def snapshot(t, i, st):
-            if record_divergence:
-                snap_w[t, i] = np.asarray(st.w)
-                snap_b[t, i] = float(st.b)
-
-    coord = CoordinatorNode(
-        lcfg, acfg, bm, clock, network, m, reference0,
-        sync_budget=(sync_budget if lcfg.is_kernel else 0),
-        compress_method=compress_method)
+    reference0 = sub.init_reference()
+    coord = CoordinatorNode(sub, acfg, bm, clock, network, m, reference0)
     nodes = []
     for i in range(m):
         node = LearnerNode(
-            i, lcfg, acfg, bm, clock, network,
-            X[:, i], Y[:, i], compute_times[:, i], ops,
-            loss_out, err_out,
-            snapshot=snapshot if record_divergence else None)
+            i, sub, acfg, bm, clock, network,
+            X[:, i], Y[:, i], compute_times[:, i],
+            loss_out, err_out, snapshot=snapshot)
         node.reference = reference0
         nodes.append(node)
     for node in nodes:
@@ -143,12 +127,8 @@ def run_async_simulation(
     sync_rounds = np.sort(np.asarray(
         [s["round"] for s in coord.sync_log], dtype=np.int64))
 
-    if record_divergence and lcfg.is_kernel:
-        divs = _kernel_divergences(lcfg, snap_sv, snap_alpha, snap_id)
-    elif record_divergence:
-        divs = _linear_divergences(snap_w, snap_b)
-    else:
-        divs = np.zeros((T,))
+    divs = sub.divergence_series(bufs) if record_divergence \
+        else np.zeros((T,))
 
     lags = coord.staleness_seen
     return AsyncSimResult(
@@ -173,24 +153,6 @@ def run_async_simulation(
         num_dropped=network.dropped,
         events_processed=clock.events_processed,
     )
-
-
-def _kernel_divergences(lcfg, snap_sv, snap_alpha, snap_id) -> np.ndarray:
-    """Round-indexed divergence delta(f_t) from the model snapshots,
-    computed with the same stacked ops as the serial driver."""
-    spec = lcfg.kernel
-    div_t = jax.jit(lambda f: rkhs.divergence_stacked(spec, f))
-    out = [float(div_t(SVModel(sv=jnp.asarray(snap_sv[t]),
-                               alpha=jnp.asarray(snap_alpha[t]),
-                               sv_id=jnp.asarray(snap_id[t]))))
-           for t in range(snap_sv.shape[0])]
-    return np.asarray(out)
-
-
-def _linear_divergences(snap_w, snap_b) -> np.ndarray:
-    wbar = snap_w.mean(axis=1, keepdims=True)      # (T, 1, d)
-    bbar = snap_b.mean(axis=1, keepdims=True)      # (T, 1)
-    return (((snap_w - wbar) ** 2).sum(-1) + (snap_b - bbar) ** 2).mean(axis=1)
 
 
 # Convenience wrappers mirroring core.simulation's entry points.

@@ -1,12 +1,20 @@
 """Message-passing nodes of the asynchronous runtime (DESIGN.md Sec. 6).
 
-A :class:`LearnerNode` runs any ``core.learners`` update on its own
+A :class:`LearnerNode` runs any ``core.substrate`` learner on its own
 stream at its own (straggler-perturbed) pace; a
 :class:`CoordinatorNode` owns the reference model and aggregates
 arriving models with staleness weights.  Nodes interact ONLY through
 ``transport.Network`` messages — there is no shared state and no
 global barrier, so the same node code would run unchanged over real
 sockets.
+
+Everything representation-specific — local update, prediction,
+local-condition distance, upload/download payload sizing (Sec. 3 delta
+encoding for SV, fixed-size vectors for RFF / linear), and the
+staleness-weighted aggregation — goes through the
+``core.substrate.Substrate`` node face (DESIGN.md Sec. 8), so every
+substrate runs through the identical protocol machinery the scan
+engine uses.
 
 Message kinds (all payloads are plain dicts):
 
@@ -25,41 +33,18 @@ discounted by their staleness weight.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Set
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import learners, rkhs
-from ..core.learners import KernelLearnerState, LearnerConfig, LinearLearnerState
 from ..core.accounting import ByteModel
-from .async_protocol import (AsyncProtocolConfig, aggregate_kernel,
-                             aggregate_linear, staleness_weight)
+from ..core.substrate import Substrate, node_ops
+from .async_protocol import AsyncProtocolConfig, staleness_weight
 from .clock import Clock
-from .transport import (Message, Network, idset, kernel_payload_bytes,
-                        linear_payload_bytes)
+from .transport import Message, Network
 
 COORD = "coord"
-
-
-@dataclasses.dataclass
-class KernelOps:
-    """Jitted per-learner compute, shared across nodes (one compile)."""
-
-    update: Callable
-    predict: Callable
-    dist: Callable
-
-
-def make_kernel_ops(lcfg: LearnerConfig) -> KernelOps:
-    spec = lcfg.kernel
-    return KernelOps(
-        update=jax.jit(lambda st, ex: learners.update(lcfg, st, ex)),
-        predict=jax.jit(lambda f, x: rkhs.predict(spec, f, x[None])[0]),
-        dist=jax.jit(lambda f, r: rkhs.dist_sq(spec, f, r)),
-    )
 
 
 class LearnerNode:
@@ -74,7 +59,7 @@ class LearnerNode:
     def __init__(
         self,
         idx: int,
-        lcfg: LearnerConfig,
+        sub: Substrate,
         acfg: AsyncProtocolConfig,
         bm: ByteModel,
         clock: Clock,
@@ -82,21 +67,20 @@ class LearnerNode:
         X: np.ndarray,              # (T, d) this learner's stream
         Y: np.ndarray,              # (T,)
         compute_times: np.ndarray,  # (T,)
-        ops: Optional[KernelOps],
         loss_out: np.ndarray,       # (T, m) harness-owned
         err_out: np.ndarray,
         snapshot: Optional[Callable[[int, int, Any], None]] = None,
     ):
         self.idx = idx
         self.name = f"learner{idx}"
-        self.lcfg, self.acfg, self.bm = lcfg, acfg, bm
+        self.sub, self.acfg, self.bm = sub, acfg, bm
         self.clock, self.network = clock, network
         self.X, self.Y, self.compute_times = X, Y, compute_times
-        self.ops = ops
+        self.ops = node_ops(sub)    # jitted, shared across nodes
         self.loss_out, self.err_out = loss_out, err_out
         self.snapshot = snapshot
 
-        self.state = learners.init_state(lcfg, idx)
+        self.state = sub.init_node(idx)
         self.reference = None        # set by harness before start()
         self.known_union: Set[int] = set()
         self.ref_version = 0
@@ -114,20 +98,14 @@ class LearnerNode:
         t = self.t
         x = jnp.asarray(self.X[t])
         y = jnp.asarray(self.Y[t])
-        # service quality before the update, as in the serial driver
-        if self.lcfg.is_kernel:
-            yhat = self.ops.predict(self.state.model, x)
-        else:
-            yhat = self.state.w @ x + self.state.b
-        if self.lcfg.loss == "hinge":
+        # one round = predict (service quality, pre-update, as in the
+        # serial driver) + update; fused where the substrate shares
+        # work between the two (e.g. the RFF feature map)
+        self.state, loss, yhat = self.ops.round(self.state, (x, y))
+        if self.sub.loss == "hinge":
             self.err_out[t, self.idx] = float(jnp.sign(yhat) != y)
         else:
             self.err_out[t, self.idx] = float((yhat - y) ** 2)
-
-        if self.lcfg.is_kernel:
-            self.state, loss = self.ops.update(self.state, (x, y))
-        else:
-            self.state, loss = learners.update(self.lcfg, self.state, (x, y))
         self.loss_out[t, self.idx] = float(loss)
         self.t = t + 1
         if self.snapshot is not None:
@@ -141,7 +119,7 @@ class LearnerNode:
             self.finish_time = self.clock.now
 
     def _model(self):
-        return self.state.model if self.lcfg.is_kernel else self.state
+        return self.sub.node_model(self.state)
 
     def _maybe_communicate(self, t: int) -> None:
         if self.acfg.kind == "periodic":
@@ -154,11 +132,7 @@ class LearnerNode:
                                   self.acfg.control_bytes, round=t)
 
     def _violated(self) -> bool:
-        if self.lcfg.is_kernel:
-            d = float(self.ops.dist(self.state.model, self.reference))
-        else:
-            d = float(jnp.sum((self.state.w - self.reference.w) ** 2)
-                      + (self.state.b - self.reference.b) ** 2)
+        d = float(self.ops.dist(self._model(), self.reference))
         return d > self.acfg.delta
 
     # -- protocol messages --------------------------------------------------
@@ -175,15 +149,8 @@ class LearnerNode:
             raise ValueError(f"learner got unexpected {msg.kind!r}")
 
     def _upload(self, round_idx: int, episode: Optional[int] = None) -> None:
-        if self.lcfg.is_kernel:
-            ids = idset(self.state.model.sv_id)
-            nbytes = kernel_payload_bytes(self.bm, ids, self.known_union)
-            model = self.state.model
-        else:
-            ids = set()
-            nbytes = linear_payload_bytes(self.lcfg.dim + 1,
-                                          self.bm.dtype_bytes)
-            model = self.state
+        model, ids, nbytes = self.sub.upload_payload(
+            self.bm, self.state, self.known_union)
         self.network.send(
             self.name, COORD, "upload",
             {"learner": self.idx, "model": model, "ids": ids,
@@ -194,11 +161,7 @@ class LearnerNode:
     def _adopt(self, payload: Dict[str, Any]) -> None:
         """Adopt the aggregated reference (the serial ``set_all``)."""
         fsync = payload["model"]
-        if self.lcfg.is_kernel:
-            self.state = self.state._replace(
-                model=rkhs.pad_to_budget(fsync, self.lcfg.budget))
-        else:
-            self.state = LinearLearnerState(w=fsync.w, b=fsync.b)
+        self.state = self.sub.adopt_node(self.state, fsync)
         self.reference = fsync
         self.known_union = payload["union"]
         self.ref_version = payload["version"]
@@ -211,22 +174,18 @@ class CoordinatorNode:
 
     def __init__(
         self,
-        lcfg: LearnerConfig,
+        sub: Substrate,
         acfg: AsyncProtocolConfig,
         bm: ByteModel,
         clock: Clock,
         network: Network,
         m: int,
         reference0,
-        sync_budget: int,
-        compress_method: str = "truncate",
         episode_timeout: Optional[float] = None,
     ):
-        self.lcfg, self.acfg, self.bm = lcfg, acfg, bm
+        self.sub, self.acfg, self.bm = sub, acfg, bm
         self.clock, self.network, self.m = clock, network, m
         self.reference = reference0
-        self.sync_budget = sync_budget
-        self.compress_method = compress_method
         self.version = 0
         self.episode_ctr = 0
         self.episode_open = False
@@ -296,25 +255,16 @@ class CoordinatorNode:
         self.staleness_seen.extend(lags)
         models = [e["model"] for e in entries]
 
-        if self.lcfg.is_kernel:
-            fsync, eps, union = aggregate_kernel(
-                self.lcfg.kernel, self.reference, models, weights,
-                self.sync_budget, self.compress_method)
+        fsync, eps, union = self.sub.aggregate(self.reference, models, weights)
+        if eps is not None:
             self.eps_history.append(eps)
-        else:
-            fsync = aggregate_linear(self.reference, models, weights)
-            union = set()
         self.version += 1
         self.reference = fsync
 
         trigger_round = max(e["round"] for e in entries)
         payload = {"model": fsync, "union": union, "version": self.version}
         for e in entries:
-            if self.lcfg.is_kernel:
-                nbytes = kernel_payload_bytes(self.bm, union, e["ids"])
-            else:
-                nbytes = linear_payload_bytes(self.lcfg.dim + 1,
-                                              self.bm.dtype_bytes)
+            nbytes = self.sub.download_payload_bytes(self.bm, union, e["ids"])
             self.network.send(COORD, f"learner{e['learner']}", "download",
                               payload, nbytes, round=trigger_round)
         self.sync_log.append({

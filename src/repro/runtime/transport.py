@@ -19,29 +19,15 @@ cumulative latency per directed link.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Set, Tuple
+from typing import Any, Callable, Dict, Tuple
 
-from ..core.accounting import ByteModel, idset
+# Payload sizing (the Sec. 3 delta encoding per link) lives with the
+# rest of the byte accounting in core.accounting; the substrate layer
+# (core/substrate.py, DESIGN.md Sec. 8) chooses which sizing applies to
+# each upload/download.  Re-exported here for the transport's users.
+from ..core.accounting import (ByteModel, idset, kernel_payload_bytes,
+                               linear_payload_bytes)
 from .clock import Clock, SystemModel
-
-
-# ---------------------------------------------------------------------------
-# Delta encoding (byte sizing only — payloads stay in-memory references)
-# ---------------------------------------------------------------------------
-
-
-def kernel_payload_bytes(bm: ByteModel, send_ids: Set[int],
-                         receiver_known: Set[int]) -> int:
-    """Bytes to ship an expansion over ``send_ids`` to a receiver that
-    already caches ``receiver_known``: every coefficient, only novel
-    support vectors."""
-    return (len(send_ids) * bm.B_alpha
-            + len(send_ids - receiver_known) * bm.B_x)
-
-
-def linear_payload_bytes(num_params: int, dtype_bytes: int = 4) -> int:
-    """Dense weight vectors have no identity structure: full re-send."""
-    return num_params * dtype_bytes
 
 
 # ---------------------------------------------------------------------------

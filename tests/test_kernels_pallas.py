@@ -88,6 +88,103 @@ def test_rkhs_dist_sq_fused():
     np.testing.assert_allclose(float(got), float(want), rtol=1e-4, atol=1e-3)
 
 
+# --- substrate backend dispatch (core/substrate.py, DESIGN.md Sec. 8) -------
+#
+# The substrate layer's backend="pallas" routes predict / dist_to_ref /
+# divergence through ops.gram / quadform / rff_features.  These tests
+# pin the interpret-mode Pallas kernels against the substrate's
+# *reference* paths (the pure-jnp semantics in core/rkhs.py and
+# core/rff.py), tolerance-bounded, on shapes large enough that the
+# Pallas launch actually engages (>= 128, see ops._MIN_PALLAS).
+
+
+def _sv_fixture(m=2, budget=130, d=9, seed=5):
+    from repro.core.learners import LearnerConfig
+    from repro.core.rkhs import KernelSpec, SVModel
+    from repro.core.substrate import SVSubstrate
+    rng = np.random.default_rng(seed)
+
+    def one():
+        active = rng.random(budget) < 0.8
+        return SVModel(
+            sv=jnp.asarray(rng.normal(size=(budget, d)), jnp.float32),
+            alpha=jnp.asarray(rng.normal(size=(budget,)), jnp.float32),
+            sv_id=jnp.asarray(np.where(active, np.arange(budget), -1),
+                              jnp.int32))
+
+    models = SVModel(*[jnp.stack(parts) for parts in
+                       zip(*[tuple(one()) for _ in range(m)])])
+    ref_model = one()
+    lcfg = LearnerConfig(algo="kernel_sgd", budget=budget,
+                         kernel=KernelSpec("gaussian", gamma=0.4), dim=d)
+    return (SVSubstrate(lcfg=lcfg),
+            SVSubstrate(lcfg=lcfg, backend="pallas"),
+            models, ref_model, rng)
+
+
+def test_substrate_predict_pallas_vs_reference():
+    s_ref, s_pal, models, _, rng = _sv_fixture()
+    x = jnp.asarray(rng.normal(size=(2, 9)), jnp.float32)
+    got = s_pal.predict(models, x)
+    want = s_ref.predict(models, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_substrate_dist_to_ref_pallas_vs_reference():
+    s_ref, s_pal, models, ref_model, _ = _sv_fixture()
+    got = s_pal.dist_to_ref(models, ref_model)
+    want = s_ref.dist_to_ref(models, ref_model)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-3)
+
+
+def test_substrate_divergence_pallas_vs_reference():
+    s_ref, s_pal, models, _, _ = _sv_fixture()
+    got, want = s_pal.divergence(models), s_ref.divergence(models)
+    np.testing.assert_allclose(float(got), float(want), rtol=5e-4, atol=5e-3)
+
+
+def test_substrate_rff_features_pallas_vs_reference():
+    from repro.core.rff import RFFSpec
+    from repro.core.substrate import RFFSubstrate
+    spec = RFFSpec(dim=8, num_features=256, gamma=0.5, seed=1)
+    s_ref = RFFSubstrate(spec=spec)
+    s_pal = RFFSubstrate(spec=spec, backend="pallas")
+    rng = np.random.default_rng(6)
+    X = jnp.asarray(rng.normal(size=(140, 8)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(s_pal._phi(X)),
+                               np.asarray(s_ref._phi(X)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_spec_entry_points_force_pallas_vs_substrate_reference():
+    """ops.gram_spec / quadform_spec / rkhs_dist_sq_spec with the Pallas
+    path forced, against the rkhs.py reference algebra the substrates
+    use by default."""
+    from repro.core import rkhs
+    from repro.core.rkhs import KernelSpec
+    spec = KernelSpec("gaussian", gamma=0.7)
+    rng = np.random.default_rng(7)
+    X = jnp.asarray(rng.normal(size=(130, 6)), jnp.float32)
+    Y = jnp.asarray(rng.normal(size=(150, 6)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(130,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(150,)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.gram_spec(spec, X, Y, force_pallas=True)),
+        np.asarray(rkhs.gram(spec, X, Y)), rtol=2e-5, atol=2e-5)
+    want_qf = float(a @ rkhs.gram(spec, X, Y) @ b)
+    got_qf = float(ops.quadform_spec(spec, X, Y, a, b, force_pallas=True))
+    np.testing.assert_allclose(got_qf, want_qf, rtol=5e-4,
+                               atol=5e-3 * max(1.0, abs(want_qf)))
+    fa = rkhs.SVModel(sv=X, alpha=a, sv_id=jnp.arange(130, dtype=jnp.int32))
+    fb = rkhs.SVModel(sv=Y, alpha=b,
+                      sv_id=jnp.arange(130, 280, dtype=jnp.int32))
+    np.testing.assert_allclose(
+        float(ops.rkhs_dist_sq_spec(spec, X, Y, a, b)),
+        float(rkhs.dist_sq(spec, fa, fb)), rtol=1e-4, atol=1e-3)
+
+
 # --- flash attention (kernels/flash.py) -------------------------------------
 
 def _flash_ref(q, k, v, causal=True):

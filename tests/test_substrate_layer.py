@@ -1,0 +1,331 @@
+"""The learner-substrate layer (core/substrate.py, DESIGN.md Sec. 8).
+
+SV / linear parity with the legacy drivers is covered by
+tests/test_engine.py (which runs unmodified through the generic scan
+core).  This file tests what is NEW with the substrate layer: the RFF
+substrate through engine.run / engine.sweep / the async runtime with
+its Cor. 8 byte guarantee, mixed-substrate sweeps, the Pallas backend
+dispatch, and the sv_id capacity guard.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, learners, rff, substrate
+from repro.core.accounting import sync_bytes_linear
+from repro.core.learners import LearnerConfig
+from repro.core.protocol import ProtocolConfig
+from repro.core.rff import RFFSpec
+from repro.core.rkhs import KernelSpec, SVModel
+from repro.core.substrate import (LinearSubstrate, RFFSubstrate, SVSubstrate,
+                                  substrate_of)
+from repro.data import susy_stream
+from repro.runtime import AsyncProtocolConfig, SystemConfig, run_async_simulation
+
+T, M, D_IN = 90, 3, 8
+NUM_FEATURES = 64
+RSPEC = RFFSpec(dim=D_IN, num_features=NUM_FEATURES, gamma=0.3, seed=0)
+
+
+def _kernel_cfg(budget=16):
+    return LearnerConfig(algo="kernel_sgd", loss="hinge", eta=0.5, lam=0.01,
+                         budget=budget,
+                         kernel=KernelSpec("gaussian", gamma=0.3), dim=D_IN)
+
+
+# ---------------------------------------------------------------------------
+# substrate_of dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_substrate_of_dispatch():
+    assert isinstance(substrate_of(_kernel_cfg()), SVSubstrate)
+    assert isinstance(
+        substrate_of(LearnerConfig(algo="linear_pa", dim=D_IN)),
+        LinearSubstrate)
+    assert isinstance(substrate_of(RSPEC), RFFSubstrate)
+    sub = RFFSubstrate(spec=RSPEC)
+    assert substrate_of(sub) is sub
+    with pytest.raises(TypeError):
+        substrate_of("nope")
+    # explicit overrides are applied to an existing substrate, not
+    # silently dropped; impossible overrides raise
+    assert substrate_of(sub, backend="pallas").backend == "pallas"
+    assert substrate_of(sub).backend == "reference"   # default = no-op
+    sv = substrate_of(_kernel_cfg(), compress_method="project")
+    assert substrate_of(sv, sync_budget=7).sync_budget == 7
+    assert substrate_of(sv, sync_budget=7).compress_method == "project"
+    with pytest.raises(ValueError, match="sync_budget"):
+        substrate_of(sub, sync_budget=7)
+    # substrates are hashable (they key the engine's compile cache)
+    assert hash(substrate_of(_kernel_cfg())) == hash(substrate_of(_kernel_cfg()))
+
+
+def test_substrate_config_validation():
+    with pytest.raises(ValueError):
+        SVSubstrate(lcfg=LearnerConfig(algo="linear_sgd", dim=D_IN))
+    with pytest.raises(ValueError):
+        LinearSubstrate(lcfg=_kernel_cfg())
+    with pytest.raises(ValueError):
+        RFFSubstrate(spec=RSPEC, loss="absolute")
+    with pytest.raises(ValueError):
+        SVSubstrate(lcfg=_kernel_cfg(), backend="cuda")
+    # default sync budget resolves to the learner budget
+    assert SVSubstrate(lcfg=_kernel_cfg(budget=24)).sync_budget == 24
+
+
+def test_substrate_rejects_dim_mismatch():
+    X, Y = susy_stream(T=10, m=M, d=D_IN + 1, seed=0)
+    with pytest.raises(ValueError, match="dim"):
+        engine.run(RFFSubstrate(spec=RSPEC),
+                   ProtocolConfig(kind="periodic", period=5), X, Y)
+
+
+# ---------------------------------------------------------------------------
+# RFF substrate: engine.run with Cor. 8 byte guarantee
+# ---------------------------------------------------------------------------
+
+
+PER_SYNC = sync_bytes_linear(NUM_FEATURES + 1, M)
+
+
+@pytest.mark.parametrize("pcfg", [
+    ProtocolConfig(kind="dynamic", delta=2.0),
+    ProtocolConfig(kind="periodic", period=9),
+    ProtocolConfig(kind="continuous"),
+], ids=lambda p: p.kind)
+def test_rff_engine_bytes_independent_of_rounds(pcfg):
+    X, Y = susy_stream(T=T, m=M, d=D_IN, seed=1)
+    res = engine.run(RFFSubstrate(spec=RSPEC), pcfg, X, Y)
+    assert res.num_syncs > 0
+    round_bytes = np.diff(np.concatenate([[0], res.cumulative_bytes]))
+    nz = round_bytes[round_bytes > 0]
+    # every sync costs exactly 2 m (D+1) B bytes, no matter how late in
+    # the stream it happens — the Cor. 8 strict-adaptivity payload
+    assert (nz == PER_SYNC).all()
+    assert res.total_bytes == res.num_syncs * PER_SYNC
+    # an eps-free substrate reports no compression errors, and records
+    # its (cheap) divergence series unconditionally like the linear driver
+    assert len(res.eps_history) == 0
+    assert len(res.divergences) == len(res.cumulative_loss)
+
+
+def test_rff_per_sync_bytes_same_for_longer_streams():
+    """The per-sync payload must not grow with rounds seen (the SV
+    union does): run 60 and 180 rounds, compare the nonzero per-round
+    byte values."""
+    sub = RFFSubstrate(spec=RSPEC)
+    pcfg = ProtocolConfig(kind="periodic", period=7)
+    payloads = []
+    for t in (60, 180):
+        X, Y = susy_stream(T=t, m=M, d=D_IN, seed=2)
+        res = engine.run(sub, pcfg, X, Y)
+        rb = np.diff(np.concatenate([[0], res.cumulative_bytes]))
+        payloads.append(set(rb[rb > 0].tolist()))
+    assert payloads[0] == payloads[1] == {PER_SYNC}
+
+
+def test_rff_substrate_update_matches_make_update():
+    """The substrate's vectorized update is the rff.make_update
+    reference, learner by learner."""
+    sub = RFFSubstrate(spec=RSPEC, eta=0.5, lam=0.01, loss="hinge")
+    W, b = substrate._rff_consts(RSPEC)
+    upd = rff.make_update(RSPEC, jnp.asarray(W), jnp.asarray(b),
+                          eta=0.5, lam=0.01, loss="hinge")
+    rng = np.random.default_rng(0)
+    xs = rng.normal(size=(5, M, D_IN)).astype(np.float32)
+    ys = np.sign(rng.normal(size=(5, M))).astype(np.float32)
+
+    state = sub.init(M)
+    for x, y in zip(xs, ys):
+        state, _ = sub.update(state, (jnp.asarray(x), jnp.asarray(y)))
+
+    for i in range(M):
+        ref_state = rff.init_state(RSPEC)
+        for x, y in zip(xs, ys):
+            ref_state, _ = upd(ref_state,
+                               (jnp.asarray(x[i]), jnp.asarray(y[i])))
+        np.testing.assert_allclose(np.asarray(state.w[i]),
+                                   np.asarray(ref_state.w),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(state.b[i]), float(ref_state.b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# RFF through engine.sweep and mixed-substrate grids
+# ---------------------------------------------------------------------------
+
+
+def test_rff_sweep_matches_solo_runs():
+    X, Y = susy_stream(T=60, m=M, d=D_IN, seed=3)
+    sub = RFFSubstrate(spec=RSPEC)
+    grid = [
+        ProtocolConfig(kind="dynamic", delta=0.5),
+        ProtocolConfig(kind="dynamic", delta=2.0, mini_batch=4),
+        ProtocolConfig(kind="periodic", period=11),
+    ]
+    sw = engine.sweep(sub, grid, X, Y)
+    assert len(sw) == len(grid)
+    assert sw.eps is None
+    for i, p in enumerate(grid):
+        solo = engine.run(sub, p, X, Y)
+        np.testing.assert_array_equal(solo.cumulative_bytes,
+                                      sw[i].cumulative_bytes)
+        np.testing.assert_array_equal(solo.sync_rounds, sw[i].sync_rounds)
+        np.testing.assert_allclose(solo.cumulative_loss,
+                                   sw[i].cumulative_loss,
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_mixed_substrate_sweep():
+    """One sweep call serving SV, RFF, and linear configs on the same
+    stream reproduces each substrate's solo run."""
+    X, Y = susy_stream(T=50, m=M, d=D_IN, seed=4)
+    subs = [
+        substrate_of(_kernel_cfg()),
+        RFFSubstrate(spec=RSPEC),
+        substrate_of(LearnerConfig(algo="linear_pa", loss="hinge", C=1.0,
+                                   dim=D_IN)),
+    ]
+    grid = [
+        ProtocolConfig(kind="dynamic", delta=1.0),
+        ProtocolConfig(kind="dynamic", delta=1.0),
+        ProtocolConfig(kind="periodic", period=8),
+    ]
+    sw = engine.sweep(subs, grid, X, Y)
+    assert sw.eps is not None          # the SV member has an eps series
+    assert sw.divergences is None      # SV divergence is opt-in
+    for i in range(len(grid)):
+        solo = engine.run(subs[i], grid[i], X, Y)
+        np.testing.assert_array_equal(solo.cumulative_bytes,
+                                      sw[i].cumulative_bytes)
+        np.testing.assert_array_equal(solo.sync_rounds, sw[i].sync_rounds)
+        np.testing.assert_allclose(solo.cumulative_loss,
+                                   sw[i].cumulative_loss,
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_mixed_substrate_sweep_validates_length():
+    X, Y = susy_stream(T=10, m=M, d=D_IN, seed=0)
+    with pytest.raises(ValueError, match="substrates"):
+        engine.sweep([RFFSubstrate(spec=RSPEC)],
+                     [ProtocolConfig(kind="dynamic")] * 2, X, Y)
+
+
+# ---------------------------------------------------------------------------
+# RFF through the async event-driven runtime
+# ---------------------------------------------------------------------------
+
+
+def test_rff_async_bytes_independent_of_rounds():
+    X, Y = susy_stream(T=120, m=M, d=D_IN, seed=5)
+    sub = RFFSubstrate(spec=RSPEC)
+    res = run_async_simulation(
+        sub, AsyncProtocolConfig(kind="dynamic", delta=2.0), X, Y,
+        sys_cfg=SystemConfig())
+    assert res.num_syncs > 0
+    assert res.total_bytes == res.num_syncs * PER_SYNC
+    assert len(res.eps_history) == 0
+    assert np.isfinite(res.total_loss)
+    # divergence series recorded through the substrate snapshot hooks
+    assert len(res.divergences) == 120 and np.isfinite(res.divergences).all()
+
+
+def test_rff_async_matches_engine_at_zero_latency():
+    """Ideal network + alpha=1: the async dynamic RFF run collapses to
+    the engine's round structure (fixed-size aggregation is exact)."""
+    X, Y = susy_stream(T=100, m=M, d=D_IN, seed=6)
+    sub = RFFSubstrate(spec=RSPEC)
+    res_e = engine.run(sub, ProtocolConfig(kind="dynamic", delta=2.0), X, Y)
+    res_a = run_async_simulation(
+        sub, AsyncProtocolConfig(kind="dynamic", delta=2.0), X, Y,
+        sys_cfg=SystemConfig(), record_divergence=False)
+    assert res_e.num_syncs == res_a.num_syncs
+    np.testing.assert_array_equal(res_e.sync_rounds, res_a.sync_rounds)
+    assert res_e.total_bytes == res_a.total_bytes
+    np.testing.assert_allclose(res_e.total_loss, res_a.total_loss, rtol=1e-5)
+
+
+def test_rff_async_under_stragglers_stays_fixed_payload():
+    X, Y = susy_stream(T=80, m=4, d=D_IN, seed=7)
+    res = run_async_simulation(
+        RFFSubstrate(spec=RSPEC),
+        AsyncProtocolConfig(kind="dynamic", delta=1.0, alpha=0.6,
+                            staleness="poly", agg_window=0.3),
+        X, Y,
+        sys_cfg=SystemConfig(seed=1, compute_jitter=0.3, straggler_frac=0.25,
+                             base_latency=0.4, latency_jitter=0.5),
+        record_divergence=False)
+    assert np.isfinite(res.total_loss)
+    assert res.num_syncs > 0
+    # windows may fragment (fewer than m uploads per aggregation), but
+    # every shipped model — upload or download — is the same fixed-size
+    # payload, so the total is an exact multiple of it
+    per_message = (NUM_FEATURES + 1) * 4
+    assert res.total_bytes % per_message == 0
+
+
+# ---------------------------------------------------------------------------
+# sv_id capacity guard (int32 minting bound)
+# ---------------------------------------------------------------------------
+
+
+def test_check_id_capacity():
+    learners.check_id_capacity(learners.MAX_INSERTIONS_PER_LEARNER)
+    with pytest.raises(ValueError, match="int32"):
+        learners.check_id_capacity(learners.MAX_INSERTIONS_PER_LEARNER + 1)
+    # the bound is what the minting scheme can actually represent
+    top_id = (learners.MAX_INSERTIONS_PER_LEARNER * learners.MAX_LEARNERS
+              + learners.MAX_LEARNERS - 1)
+    assert top_id <= np.iinfo(np.int32).max
+    assert np.int32(top_id) == top_id    # no wrap at the documented bound
+
+
+def test_engine_refuses_id_wrapping_runs():
+    sub = substrate_of(_kernel_cfg())
+    with pytest.raises(ValueError, match="int32"):
+        sub.validate(learners.MAX_INSERTIONS_PER_LEARNER + 1, M, D_IN)
+    # primal substrates mint no ids: no bound applies
+    RFFSubstrate(spec=RSPEC).validate(10**9, M, D_IN)
+
+
+def test_sv_ids_stay_int32_through_update():
+    lcfg = _kernel_cfg(budget=4)
+    state = learners.init_state(lcfg, 2)
+    x = jnp.ones((D_IN,), jnp.float32)
+    state, _ = learners.kernel_update(lcfg, state, (x, jnp.asarray(-1.0)))
+    assert state.model.sv_id.dtype == jnp.int32
+    assert state.counter.dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Pallas backend through the substrate (end-to-end)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_backend_pallas_matches_reference_sv():
+    X, Y = susy_stream(T=40, m=M, d=D_IN, seed=8)
+    lcfg = _kernel_cfg()
+    pcfg = ProtocolConfig(kind="dynamic", delta=1.0)
+    r_ref = engine.run(lcfg, pcfg, X, Y, record_divergence=True)
+    r_pal = engine.run(lcfg, pcfg, X, Y, record_divergence=True,
+                       backend="pallas")
+    np.testing.assert_array_equal(r_ref.cumulative_bytes,
+                                  r_pal.cumulative_bytes)
+    np.testing.assert_array_equal(r_ref.sync_rounds, r_pal.sync_rounds)
+    np.testing.assert_allclose(r_ref.cumulative_loss, r_pal.cumulative_loss,
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(r_ref.divergences, r_pal.divergences,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_engine_backend_pallas_matches_reference_rff():
+    X, Y = susy_stream(T=40, m=M, d=D_IN, seed=9)
+    pcfg = ProtocolConfig(kind="dynamic", delta=2.0)
+    r_ref = engine.run(RFFSubstrate(spec=RSPEC), pcfg, X, Y)
+    r_pal = engine.run(RFFSubstrate(spec=RSPEC, backend="pallas"), pcfg, X, Y)
+    np.testing.assert_array_equal(r_ref.cumulative_bytes,
+                                  r_pal.cumulative_bytes)
+    np.testing.assert_allclose(r_ref.cumulative_loss, r_pal.cumulative_loss,
+                               rtol=1e-5, atol=1e-4)

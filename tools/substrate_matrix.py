@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Quick substrate matrix check (run in CI).
+
+Runs every substrate (SV / RFF / linear) x protocol kind
+{periodic, dynamic} through BOTH drivers — the device-resident scan
+engine (``core.engine.run``) and the asynchronous event-driven harness
+(``repro.runtime.run_async_simulation``) — and asserts the invariants
+every cell must satisfy:
+
+- finite cumulative loss, at least one synchronization;
+- byte ledger consistent with the sync count (for the fixed-payload
+  substrates, total bytes == num_syncs * 2 m (p+1) B exactly);
+- the engine and the zero-latency async run agree on the sync count
+  for the fixed-payload substrates (their aggregation is exact).
+
+One line per cell; exits non-zero on the first violated invariant.
+Usage:  PYTHONPATH=src python tools/substrate_matrix.py
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import engine  # noqa: E402
+from repro.core.accounting import sync_bytes_linear  # noqa: E402
+from repro.core.learners import LearnerConfig  # noqa: E402
+from repro.core.protocol import ProtocolConfig  # noqa: E402
+from repro.core.rff import RFFSpec  # noqa: E402
+from repro.core.rkhs import KernelSpec  # noqa: E402
+from repro.core.substrate import (LinearSubstrate, RFFSubstrate,  # noqa: E402
+                                  SVSubstrate)
+from repro.data import susy_stream  # noqa: E402
+from repro.runtime import (AsyncProtocolConfig, SystemConfig,  # noqa: E402
+                           run_async_simulation)
+
+T, M, D = 80, 3, 8
+
+
+def substrates():
+    kcfg = LearnerConfig(algo="kernel_sgd", loss="hinge", eta=0.5, lam=0.01,
+                         budget=32, kernel=KernelSpec("gaussian", gamma=0.3),
+                         dim=D)
+    lcfg = LearnerConfig(algo="linear_sgd", loss="hinge", eta=0.2, lam=0.01,
+                         dim=D)
+    return [
+        ("sv", SVSubstrate(lcfg=kcfg), None),
+        ("rff", RFFSubstrate(spec=RFFSpec(dim=D, num_features=64, gamma=0.3,
+                                          seed=0)), 64 + 1),
+        ("linear", LinearSubstrate(lcfg=lcfg), D + 1),
+    ]
+
+
+def kinds():
+    return [
+        ("periodic", ProtocolConfig(kind="periodic", period=10),
+         AsyncProtocolConfig(kind="periodic", period=10)),
+        ("dynamic", ProtocolConfig(kind="dynamic", delta=1.0),
+         AsyncProtocolConfig(kind="dynamic", delta=1.0)),
+    ]
+
+
+def main() -> int:
+    X, Y = susy_stream(T=T, m=M, d=D, seed=0)
+    failures = 0
+    for sname, sub, num_params in substrates():
+        for kname, pcfg, acfg in kinds():
+            res = engine.run(sub, pcfg, X, Y)
+            res_a = run_async_simulation(sub, acfg, X, Y,
+                                         sys_cfg=SystemConfig(),
+                                         record_divergence=False)
+            ok = (np.isfinite(res.total_loss)
+                  and np.isfinite(res_a.total_loss)
+                  and res.num_syncs > 0 and res_a.num_syncs > 0
+                  and res.total_bytes > 0)
+            if num_params is not None:
+                per_sync = sync_bytes_linear(num_params, M)
+                ok = ok and res.total_bytes == res.num_syncs * per_sync
+                ok = ok and res_a.total_bytes == res_a.num_syncs * per_sync
+                ok = ok and res.num_syncs == res_a.num_syncs
+            print(f"substrate={sname} kind={kname} engine_syncs="
+                  f"{res.num_syncs} engine_bytes={res.total_bytes} "
+                  f"async_syncs={res_a.num_syncs} "
+                  f"async_bytes={res_a.total_bytes} ok={ok}")
+            failures += not ok
+    print(f"substrate_matrix: {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
