@@ -15,13 +15,25 @@ configs as bench_tradeoff): per-system rounds/sec for loop and scan
 >=8-config dynamic-protocol grid run once per-config through the scan
 and once through one vmapped sweep.
 
+Distributed mode (runs when >=2 devices are visible, e.g. under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 as CI does): the
+same systems through ``engine.run(..., mesh=...)`` with the learner
+axis sharded (DESIGN.md Sec. 9), checking the parity contract — losses
+bit-identical, ledger integer-exact — plus the
+``topology="allreduce"`` pricing, and a learner-weak-scaling row
+(4x the learners on the same mesh).
+
 Claims (recorded in the claims rows):
   (1) the scan engine beats the loop driver by >=10x rounds/sec in
       geometric mean over the tradeoff systems, with byte-identical
       ledgers;
   (2) the vmapped sweep amortizes further: sweeping the grid in one
       compile is faster than running the same configs through the
-      scan engine one at a time.
+      scan engine one at a time;
+  (3) distributed (gated in CI's mesh step): mesh_losses_identical,
+      mesh_bytes_identical, mesh_allreduce_consistent — the sharded
+      engine is indistinguishable from the single-device engine
+      except for where the learners live and what a sync is priced at.
 """
 from __future__ import annotations
 
@@ -143,6 +155,79 @@ def run(quick: bool = False):
         "engine/claims", 0.0,
         f"geomean_speedup={geomean:.1f}x;"
         + ";".join(f"{k}={v}" for k, v in claims.items())))
+    rows.extend(_distributed_rows(t))
+    return rows
+
+
+def _distributed_rows(t: int):
+    """Mesh-sharded engine parity + scaling rows (DESIGN.md Sec. 9).
+
+    Correctness claims only — wall-clock on forced host devices shares
+    one CPU, so timings are reported, never gated (the CI philosophy
+    of the engine suite).
+    """
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro.core.substrate import substrate_of
+    from repro.launch import sharding as shd
+    from repro.launch.mesh import make_learner_mesh
+
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        return [Row("engine/mesh/skipped", 0.0,
+                    f"devices={n_dev};need>=2 (set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=8)")]
+
+    mesh = make_learner_mesh()
+    rows = []
+    ok_loss = ok_bytes = ok_ring = True
+    stream_sh = NamedSharding(mesh, shd.stream_pspec(("learners",)))
+
+    systems = {
+        "kernel_dynamic": (_kernel_cfg(48),
+                           ProtocolConfig(kind="dynamic", delta=2.0)),
+        "linear_dynamic": (LearnerConfig(algo="linear_sgd", loss="hinge",
+                                         eta=0.1, lam=0.001, dim=D),
+                           ProtocolConfig(kind="dynamic", delta=0.1)),
+    }
+    for name, (lcfg, pcfg) in systems.items():
+        for m_mult, tag in ((1, name), (4, f"{name}_4x_learners")):
+            m = n_dev * m_mult
+            X, Y = susy_stream(T=t, m=m, d=D, seed=0)
+            Xd = jax.device_put(np.asarray(X), stream_sh)
+            Yd = jax.device_put(np.asarray(Y), stream_sh)
+
+            res_1 = engine.run(lcfg, pcfg, X, Y)
+            engine.run(lcfg, pcfg, Xd, Yd, mesh=mesh)    # compile
+            t0 = time.perf_counter()
+            res_m = engine.run(lcfg, pcfg, Xd, Yd, mesh=mesh)
+            wall = time.perf_counter() - t0
+
+            ok_loss &= bool(np.array_equal(res_1.cumulative_loss,
+                                           res_m.cumulative_loss))
+            ok_bytes &= bool(np.array_equal(res_1.cumulative_bytes,
+                                            res_m.cumulative_bytes))
+
+            res_ring = engine.run(lcfg, pcfg, Xd, Yd, mesh=mesh,
+                                  topology="allreduce")
+            per_sync = substrate_of(lcfg).allreduce_sync_bytes(m)
+            ok_ring &= (res_ring.num_syncs == res_m.num_syncs
+                        and res_ring.total_bytes
+                        == res_ring.num_syncs * per_sync)
+            rows.append(Row(
+                f"engine/mesh/{tag}", wall * 1e6 / t,
+                f"devices={n_dev};learners={m};"
+                f"learners_per_device={m_mult};"
+                f"rounds_per_sec={t / wall:.1f};syncs={res_m.num_syncs};"
+                f"coordinator_bytes={res_m.total_bytes};"
+                f"allreduce_bytes={res_ring.total_bytes}"))
+
+    rows.append(Row(
+        "engine/mesh/claims", 0.0,
+        f"mesh_losses_identical={ok_loss};"
+        f"mesh_bytes_identical={ok_bytes};"
+        f"mesh_allreduce_consistent={ok_ring}"))
     return rows
 
 

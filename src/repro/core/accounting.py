@@ -16,9 +16,13 @@ For linear models a synchronization costs m uploads + m downloads of a
 fixed-size weight vector.
 
 Beyond the paper (DESIGN.md Sec. 3 hardware-adaptation): on a TPU mesh
-there is no coordinator; averaging is a ring all-reduce moving
-2 (m-1)/m |theta| bytes per participant.  ``allreduce_bytes`` reports
-that cost so EXPERIMENTS.md can compare both topologies.
+there is no coordinator; averaging is a ring all-reduce in which each
+of m participants moves 2 (m-1)/m |theta| bytes, i.e. a ring TOTAL of
+2 (m-1) |theta| bytes.  ``allreduce_bytes`` and ``allgather_bytes``
+price that topology — both return ring *totals*, the same semantics as
+``sync_bytes_linear`` / ``sync_bytes_kernel`` on the coordinator side —
+so every experiment can report the two topologies side by side
+(``engine.run(..., topology="allreduce")``, DESIGN.md Sec. 9).
 """
 from __future__ import annotations
 
@@ -109,11 +113,34 @@ def linear_payload_bytes(num_params: int, dtype_bytes: int = 4) -> int:
 
 
 def allreduce_bytes(num_params: int, m: int, dtype_bytes: int = 4) -> int:
-    """Ring all-reduce cost: each of m participants moves
-    2 (m-1)/m * |theta| bytes (reduce-scatter + all-gather)."""
+    """TOTAL ring bytes of one all-reduce of a |theta|-parameter vector:
+    ``2 (m-1) |theta| B`` (reduce-scatter + all-gather; each of the m
+    participants moves ``2 (m-1)/m |theta| B`` of that total).
+
+    The total semantics match the coordinator-side accounting
+    (``sync_bytes_linear`` = ``2 m |theta| B`` total), so the two
+    topologies compare directly: per direction the ring moves a
+    ``(m-1)/m`` fraction of the coordinator's bytes
+    (tests/test_accounting.py pins the ratio)."""
     if m <= 1:
         return 0
     return int(2 * (m - 1) * num_params * dtype_bytes)
+
+
+def allgather_bytes(shard_bytes: int, m: int) -> int:
+    """TOTAL ring bytes of one all-gather where each of m participants
+    contributes a ``shard_bytes``-sized shard: every participant
+    receives the other m-1 shards, so the ring moves
+    ``m (m-1) shard_bytes`` in total.
+
+    This prices the SV substrate's mesh synchronization
+    (``topology="allreduce"``, DESIGN.md Sec. 9): support-vector
+    expansions have no slot alignment across learners, so the mesh
+    average is an all-gather of the m budget-tau expansions rather
+    than a reduce-scatter."""
+    if m <= 1:
+        return 0
+    return int(m * (m - 1) * shard_bytes)
 
 
 # ---------------------------------------------------------------------------

@@ -77,11 +77,21 @@ def check_continuous_comm_bound(
 
 
 def quiescent(res: SimResult, window_frac: float = 0.2) -> bool:
-    """True iff no synchronization happened in the last window."""
+    """True iff the run reached quiescence before the trailing window:
+    no synchronization in rounds ``{w, ..., T-1}`` with
+    ``w = ceil((1 - window_frac) * T)``.
+
+    Defined through ``SimResult.quiescence_round`` so the two share
+    one boundary convention: quiescent iff quiescence was observed
+    (``quiescence_round is not None`` — a sync on the final round
+    means it never was) and it arrived no later than the window start
+    (``quiescence_round <= w``; a run with no syncs has
+    ``quiescence_round == 0`` and is always quiescent).  Edge cases
+    are pinned in tests/test_criterion.py."""
     T = len(res.cumulative_loss)
-    if res.num_syncs == 0:
-        return True
-    return int(res.sync_rounds[-1]) < (1.0 - window_frac) * T
+    w = int(np.ceil((1.0 - window_frac) * T))
+    q = res.quiescence_round
+    return q is not None and q <= w
 
 
 def consistency_trend(res: SimResult, serial_cum_loss: np.ndarray) -> np.ndarray:

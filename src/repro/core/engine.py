@@ -28,6 +28,27 @@ grid-evaluation workload of Kamp et al.'s adaptive-bounds protocol
 family, including mixed-substrate grids (e.g. SV vs RFF vs linear on
 the same stream).
 
+Mesh-sharded execution (DESIGN.md Sec. 9): ``run(..., mesh=...)`` /
+``sweep(..., mesh=...)`` execute the SAME scan core with the learner
+axis sharded across a real ``jax.sharding.Mesh`` via ``shard_map``.
+Learner state, streams, and the Sec. 3 stacked reference live sliced
+per device; ``predict`` / ``update`` / the dynamic local-condition
+distance are purely device-local, the protocol's only unconditional
+cross-device traffic is the one-bit violation all-reduce, and a
+synchronization lowers to an ``all_gather`` of the stacked models (the
+sorted-id arrays feeding ``DeviceLedger`` ride along) followed by a
+replicated average + local adopt.  The sharded engine reproduces the
+single-device engine bit-for-bit on losses and integer-exactly on the
+byte ledger (tests/test_engine_mesh.py, on 8 forced host devices).
+
+Topology accounting: ``topology="coordinator"`` (default) charges the
+paper's Sec. 3 designated-coordinator bytes; ``topology="allreduce"``
+charges the mesh collective instead (``accounting.allreduce_bytes`` /
+``allgather_bytes`` ring totals via ``Substrate.allreduce_sync_bytes``)
+— same sync decisions, same models, different price — so every
+experiment can report both topologies side by side.  The switch works
+with and without a mesh.
+
 Static vs. traced configuration: the protocol ``kind`` and the
 substrate change the structure of the scan body (what is computed each
 round), so they are compile-time specializations; ``delta``, ``period``
@@ -38,8 +59,12 @@ Exactness contract against the legacy serial driver:
 
 - ``cumulative_bytes``, ``sync_rounds``, ``num_syncs`` are
   integer-exact;
-- per-round losses / errors are the same float32 values, accumulated on
-  the host in float64 exactly like the legacy driver's accumulators;
+- per-learner per-round losses / errors are the same float32 values;
+  the cross-learner sum runs on the host (numpy, one fixed reduction
+  order for every execution mode — the legacy driver sums on device,
+  so per-round sums agree to float32 rounding and error counts agree
+  exactly), then accumulates in float64 exactly like the legacy
+  driver's accumulators;
 - the RKHS divergence series delta(f_t) is the one observable whose
   *recording* costs a full union Gram every round, and nothing in the
   protocol consumes it — so it is opt-in (``record_divergence=True``;
@@ -50,12 +75,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, NamedTuple, Optional, Sequence, Union
+import math
+from typing import List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from . import substrate as substrate_mod
 from .learners import LearnerConfig
@@ -66,6 +94,8 @@ from .substrate import Substrate
 Array = jnp.ndarray
 
 LearnerLike = Union[Substrate, LearnerConfig, "substrate_mod.RFFSpec"]
+
+TOPOLOGIES = ("coordinator", "allreduce")
 
 
 class ScanParams(NamedTuple):
@@ -93,12 +123,16 @@ def _stack_params(pcfgs: Sequence[ProtocolConfig]) -> ScanParams:
     )
 
 
-def _err_of(loss: str, yhat: Array, y: Array) -> Array:
-    """Per-round summed service error, as the legacy driver measures it
-    (prediction mistakes for hinge, squared error otherwise)."""
+def _err_terms(loss: str, yhat: Array, y: Array) -> Array:
+    """Per-learner service-error terms (prediction mistakes for hinge,
+    squared error otherwise).  The hinge decision rule is deterministic
+    at a zero margin — ``yhat >= 0`` predicts +1 — so an untrained
+    all-zero model is scored against one label, not both; the serial
+    oracle (core/simulation.py) and the async runtime nodes apply the
+    identical rule."""
     if loss == "hinge":
-        return jnp.sum((jnp.sign(yhat) != y).astype(jnp.float32))
-    return jnp.sum((yhat - y) ** 2)
+        return (jnp.where(yhat >= 0, 1.0, -1.0) != y).astype(jnp.float32)
+    return (yhat - y) ** 2
 
 
 # ---------------------------------------------------------------------------
@@ -106,79 +140,230 @@ def _err_of(loss: str, yhat: Array, y: Array) -> Array:
 # ---------------------------------------------------------------------------
 
 
-def _scan_core(sub: Substrate, kind: str, record_divergence: bool):
+def _allreduce_cost(sub: Substrate, m: int) -> Array:
+    """Trace-time constant ring bytes of one sync, int32-guarded like
+    the device ledger (accounting.device_sync_bytes_kernel)."""
+    cost = int(sub.allreduce_sync_bytes(m))
+    if cost >= 2**31:
+        raise ValueError(
+            f"per-sync ring bytes {cost} for m={m} overflow the byte "
+            "ledger's int32; use the host accounting at this scale")
+    return jnp.asarray(cost, jnp.int32)
+
+
+def _make_step(sub: Substrate, kind: str, record_divergence: bool,
+               topology: str, axis):
+    """One scan step over (state, reference, ledger).
+
+    ``axis=None`` is the single-device engine: ``reference`` is ONE
+    synchronized model and every reduction sees all m learners.
+
+    ``axis`` set means the step runs inside ``shard_map`` with the
+    learner dim sharded over the named mesh axes (DESIGN.md Sec. 9):
+    state / streams / reference are per-device slices, ``reference``
+    carries a leading (local) learner axis — the Sec. 3 stacked
+    reference — and the cross-device protocol is exactly (a) the
+    one-bit violation all-reduce of the dynamic check and (b) an
+    ``all_gather`` of the stacked models when a sync fires.  The
+    loss/err observables stay PER-LEARNER (sharded outputs, summed on
+    the host identically in both modes): a device-side cross-learner
+    sum would make the recorded floats depend on the reduction order
+    the compiler picks for that program, which is exactly the
+    bit-for-bit leak the parity contract forbids.
+    """
+    sharded = axis is not None
+
+    def gather_tree(t):
+        if not sharded:
+            return t
+        return jax.tree.map(
+            lambda v: lax.all_gather(v, axis, axis=0, tiled=True), t)
+
+    def step(params: ScanParams, carry, xs):
+        state, reference, ledger = carry
+        x, y, t = xs
+
+        yhat = sub.predict(sub.models_of(state), x)
+        err = _err_terms(sub.loss, yhat, y)         # per-learner
+        state, losses = sub.update(state, (x, y))   # per-learner
+        models = sub.models_of(state)
+
+        if kind == "none":
+            do_sync = jnp.zeros((), bool)
+        elif kind == "continuous":
+            do_sync = jnp.ones((), bool)
+        elif kind == "periodic":
+            do_sync = ((t + 1) % params.period) == 0
+        else:  # dynamic: check local conditions every mini_batch rounds
+            check_now = ((t + 1) % params.mini_batch) == 0
+
+            def check(_):
+                if sharded:
+                    dists = sub.dist_to_ref_each(models, reference)
+                else:
+                    dists = sub.dist_to_ref(models, reference)
+                return jnp.any(dists > params.delta)
+
+            if sub.guarded_dist_check:
+                # the distance costs a Gram — only pay it on check
+                # rounds (lax.cond skips the untaken branch)
+                violated = lax.cond(check_now, check,
+                                    lambda _: jnp.zeros((), bool), None)
+            else:
+                violated = check_now & check(None)
+            if sharded:
+                # the one-bit violation all-reduce: the only
+                # unconditional cross-device traffic of the protocol
+                do_sync = lax.psum(violated.astype(jnp.int32), axis) > 0
+            else:
+                do_sync = violated
+
+        if kind == "none":
+            new_models, new_ref, new_ledger = models, reference, ledger
+            nbytes = jnp.zeros((), jnp.int32)
+            eps = jnp.zeros((), jnp.float32)
+        else:
+
+            def sync_branch(args):
+                models, reference, ledger = args
+                full = gather_tree(models)
+                fsync, eps = sub.average_stacked(full)
+                if topology == "coordinator":
+                    nbytes, new_ledger = sub.sync_payload(full, ledger)
+                else:
+                    m = jax.tree.leaves(full)[0].shape[0]
+                    nbytes, new_ledger = _allreduce_cost(sub, m), ledger
+                new_models = sub.adopt(models, fsync)
+                if sharded:
+                    m_local = jax.tree.leaves(models)[0].shape[0]
+                    new_ref = _stack_ref(fsync, m_local)
+                else:
+                    new_ref = fsync
+                return (new_models, new_ref, new_ledger,
+                        jnp.asarray(nbytes, jnp.int32),
+                        jnp.asarray(eps, jnp.float32))
+
+            def keep_branch(args):
+                models, reference, ledger = args
+                return (models, reference, ledger,
+                        jnp.zeros((), jnp.int32),
+                        jnp.zeros((), jnp.float32))
+
+            new_models, new_ref, new_ledger, nbytes, eps = lax.cond(
+                do_sync, sync_branch, keep_branch,
+                (models, reference, ledger))
+
+        state = sub.with_models(state, new_models)
+        if record_divergence or sub.free_divergence:
+            div = sub.divergence(gather_tree(sub.models_of(state)))
+        else:
+            div = jnp.zeros((), jnp.float32)
+        out = (losses, err, nbytes, div, do_sync, eps)
+        return (state, new_ref, new_ledger), out
+
+    return step
+
+
+def _stack_ref(ref, m: int):
+    """Broadcast one synchronized model to a leading learner axis — the
+    Sec. 3 stacked reference, one slice per learner."""
+    return jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (m,) + v.shape), ref)
+
+
+def _scan_core(sub: Substrate, kind: str, record_divergence: bool,
+               topology: str = "coordinator"):
+    step = _make_step(sub, kind, record_divergence, topology, axis=None)
+
     def simulate(params: ScanParams, X: Array, Y: Array):
         T, m, d = X.shape
         state0 = sub.init(m)
         ref0, _ = sub.average_stacked(sub.models_of(state0))
         ledger0 = sub.ledger_init(m)
-
-        def step(carry, xs):
-            state, reference, ledger = carry
-            x, y, t = xs
-
-            yhat = sub.predict(sub.models_of(state), x)
-            err = _err_of(sub.loss, yhat, y)
-            state, losses = sub.update(state, (x, y))
-            loss = jnp.sum(losses)
-            models = sub.models_of(state)
-
-            if kind == "none":
-                do_sync = jnp.zeros((), bool)
-            elif kind == "continuous":
-                do_sync = jnp.ones((), bool)
-            elif kind == "periodic":
-                do_sync = ((t + 1) % params.period) == 0
-            else:  # dynamic: check local conditions every mini_batch rounds
-                check_now = ((t + 1) % params.mini_batch) == 0
-                if sub.guarded_dist_check:
-                    # the distance costs a Gram — only pay it on check
-                    # rounds (lax.cond skips the untaken branch)
-                    def check(_):
-                        dists = sub.dist_to_ref(models, reference)
-                        return jnp.any(dists > params.delta)
-
-                    do_sync = lax.cond(check_now, check,
-                                       lambda _: jnp.zeros((), bool), None)
-                else:
-                    dists = sub.dist_to_ref(models, reference)
-                    do_sync = check_now & jnp.any(dists > params.delta)
-
-            if kind == "none":
-                new_models, new_ref, new_ledger = models, reference, ledger
-                nbytes = jnp.zeros((), jnp.int32)
-                eps = jnp.zeros((), jnp.float32)
-            else:
-
-                def sync_branch(args):
-                    models, reference, ledger = args
-                    fsync, eps = sub.average_stacked(models)
-                    nbytes, new_ledger = sub.sync_payload(models, ledger)
-                    return (sub.adopt(models, fsync), fsync, new_ledger,
-                            jnp.asarray(nbytes, jnp.int32),
-                            jnp.asarray(eps, jnp.float32))
-
-                def keep_branch(args):
-                    models, reference, ledger = args
-                    return (models, reference, ledger,
-                            jnp.zeros((), jnp.int32),
-                            jnp.zeros((), jnp.float32))
-
-                new_models, new_ref, new_ledger, nbytes, eps = lax.cond(
-                    do_sync, sync_branch, keep_branch,
-                    (models, reference, ledger))
-
-            state = sub.with_models(state, new_models)
-            if record_divergence or sub.free_divergence:
-                div = sub.divergence(sub.models_of(state))
-            else:
-                div = jnp.zeros((), jnp.float32)
-            out = (loss, err, nbytes, div, do_sync, eps)
-            return (state, new_ref, new_ledger), out
-
         ts = jnp.arange(T, dtype=jnp.int32)
-        _, outs = lax.scan(step, (state0, ref0, ledger0), (X, Y, ts))
+        _, outs = lax.scan(functools.partial(step, params),
+                           (state0, ref0, ledger0), (X, Y, ts))
         return outs
+
+    return simulate
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded core (DESIGN.md Sec. 9)
+# ---------------------------------------------------------------------------
+
+
+def learner_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    """The mesh axes the learner dim is sharded over: the ``learners``
+    axis when the mesh has one (``launch.mesh.make_learner_mesh``),
+    otherwise every axis except ``model`` (the convention of
+    DESIGN.md Sec. 5)."""
+    if "learners" in mesh.axis_names:
+        return ("learners",)
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    if not axes:
+        raise ValueError(
+            f"mesh {mesh.axis_names} has no learner axis; name one "
+            "'learners' or include a non-'model' axis")
+    return axes
+
+
+def _num_shards(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _sharded_core(sub: Substrate, kind: str, record_divergence: bool,
+                  topology: str, mesh: Mesh, axes: Tuple[str, ...],
+                  vmapped: bool, data_batched: bool):
+    """The scan core under ``shard_map``: learner axis sharded over
+    ``axes``, config axis (when ``vmapped``) vmapped INSIDE the shard
+    so one mesh program serves the whole grid.
+
+    Layout (in_specs): learner state, streams and the stacked
+    reference are sharded on their learner dim; protocol params and
+    the DeviceLedger are replicated (the ledger is the coordinator's
+    cache — every device maintains the identical copy from the
+    gathered union, so the coordinator-topology accounting needs no
+    host).  Outputs: the per-learner loss/err series come back sharded
+    like the streams; bytes / divergence / sync flags / eps are
+    replicated per-round scalars.
+    """
+    step = _make_step(sub, kind, record_divergence, topology, axis=axes)
+
+    def local_run(params: ScanParams, state0, ref0, ledger0, X, Y):
+        T = X.shape[0]
+        ts = jnp.arange(T, dtype=jnp.int32)
+        _, outs = lax.scan(functools.partial(step, params),
+                           (state0, ref0, ledger0), (X, Y, ts))
+        return outs
+
+    body = local_run
+    if vmapped:
+        dax = 0 if data_batched else None
+        body = jax.vmap(local_run,
+                        in_axes=(ScanParams(0, 0, 0), None, None, None,
+                                 dax, dax))
+
+    lead = axes if len(axes) > 1 else axes[0]
+    data_spec = P(None, None, lead) if (vmapped and data_batched) \
+        else P(None, lead)
+    # per-learner loss/err series come back sharded like the streams;
+    # bytes / divergence / flags / eps are replicated per-round scalars
+    series_spec = P(None, None, lead) if vmapped else P(None, lead)
+    scalar_spec = P()
+    smapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(lead), P(lead), P(), data_spec, data_spec),
+        out_specs=(series_spec, series_spec, scalar_spec, scalar_spec,
+                   scalar_spec, scalar_spec),
+        check_rep=False)
+
+    def simulate(params: ScanParams, X: Array, Y: Array):
+        m = X.shape[2] if (vmapped and data_batched) else X.shape[1]
+        state0 = sub.init(m)
+        ref0, _ = sub.average_stacked(sub.models_of(state0))
+        ledger0 = sub.ledger_init(m)
+        return smapped(params, state0, _stack_ref(ref0, m), ledger0, X, Y)
 
     return simulate
 
@@ -190,19 +375,45 @@ def _scan_core(sub: Substrate, kind: str, record_divergence: bool):
 
 @functools.lru_cache(maxsize=None)
 def _jitted(sub: Substrate, kind: str, record_divergence: bool,
-            vmapped: bool, data_batched: bool):
-    """One jitted (optionally vmapped) simulate fn per static config.
+            vmapped: bool, data_batched: bool,
+            topology: str = "coordinator",
+            mesh: Optional[Mesh] = None,
+            axes: Optional[Tuple[str, ...]] = None):
+    """One jitted (optionally vmapped / mesh-sharded) simulate fn per
+    static config.
 
     The cache is what lets benchmarks call ``run`` in a timing loop
     without re-tracing: jax.jit caches on function identity, so the
     closure must be built once per static configuration.  Substrates
-    are frozen dataclasses, so they key the cache directly.
+    are frozen dataclasses (and Meshes are hashable), so they key the
+    cache directly.
     """
-    core = _scan_core(sub, kind, record_divergence)
+    if mesh is not None:
+        return jax.jit(_sharded_core(
+            sub, kind, record_divergence, topology, mesh, axes,
+            vmapped, data_batched))
+    core = _scan_core(sub, kind, record_divergence, topology)
     if vmapped:
         dax = 0 if data_batched else None
         core = jax.vmap(core, in_axes=(ScanParams(0, 0, 0), dax, dax))
     return jax.jit(core)
+
+
+def _resolve_mesh(mesh: Optional[Mesh], topology: str, m: int):
+    """Validate (mesh, topology) for a run over m learners; returns
+    the learner axes (None without a mesh)."""
+    if topology not in TOPOLOGIES:
+        raise ValueError(
+            f"unknown topology {topology!r}; expected one of {TOPOLOGIES}")
+    if mesh is None:
+        return None
+    axes = learner_axes_of(mesh)
+    n = _num_shards(mesh, axes)
+    if m % n:
+        raise ValueError(
+            f"{m} learners cannot shard evenly over {n} devices "
+            f"(mesh axes {axes})")
+    return axes
 
 
 def run(
@@ -215,6 +426,8 @@ def run(
     compress_method: Optional[str] = None,   # default "truncate"
     record_divergence: bool = False,
     backend: Optional[str] = None,           # default "reference"
+    mesh: Optional[Mesh] = None,
+    topology: str = "coordinator",
 ) -> SimResult:
     """Run T rounds of m learners under pcfg, fully on device.
 
@@ -223,19 +436,33 @@ def run(
     Substrate's own configuration).  Drop-in replacement for
     ``simulation.run_kernel_simulation`` / ``run_linear_simulation``
     with the exactness contract in the module docstring.
+
+    ``mesh``: a ``jax.sharding.Mesh`` to shard the learner axis over
+    (``launch.mesh.make_learner_mesh``; m must divide evenly) — same
+    losses and ledger as the single-device engine, bit-for-bit.
+    ``topology``: "coordinator" charges the paper's Sec. 3 bytes,
+    "allreduce" the mesh collective's ring total (DESIGN.md Sec. 9);
+    decisions and models are identical either way.
     """
     sub = substrate_mod.substrate_of(
         learner, sync_budget=sync_budget, compress_method=compress_method,
         backend=backend)
-    X = np.asarray(X)
+    if not isinstance(X, jax.Array):   # keep pre-sharded streams on device
+        X = np.asarray(X)
     T, m, d = X.shape
     sub.validate(T, m, d)
-    fn = _jitted(sub, pcfg.kind, bool(record_divergence), False, False)
+    axes = _resolve_mesh(mesh, topology, m)
+    fn = _jitted(sub, pcfg.kind, bool(record_divergence), False, False,
+                 topology, mesh, axes)
     outs = fn(_params_of(pcfg), jnp.asarray(X), jnp.asarray(Y))
     loss, err, nbytes, div, flags, eps = (np.asarray(o) for o in outs)
+    # loss/err are (T, m) per-learner series; the cross-learner sum
+    # happens HERE, identically for every execution mode — numpy's
+    # pairwise float32 sum over identical per-learner values — which is
+    # what makes the mesh-sharded engine bit-for-bit with this one.
     keep_div = record_divergence or sub.free_divergence
     return SimResult.from_round_series(
-        loss, err, nbytes,
+        loss.sum(axis=1), err.sum(axis=1), nbytes,
         div if keep_div else np.zeros((0,)),
         flags,
         eps if sub.has_eps else np.zeros((0,)))
@@ -284,6 +511,8 @@ def sweep(
     compress_method: Optional[str] = None,   # default "truncate"
     record_divergence: bool = False,
     backend: Optional[str] = None,           # default "reference"
+    mesh: Optional[Mesh] = None,
+    topology: str = "coordinator",
 ) -> SweepResult:
     """Simulate a grid of protocol configurations in one compilation.
 
@@ -295,6 +524,11 @@ def sweep(
     ``pcfgs``) for mixed-substrate grids — e.g. SV vs RFF vs linear on
     the same stream.  Pass X with a leading config axis to sweep seeds
     (per-config data streams) at the same time.
+
+    With ``mesh`` the config axis stays vmapped while the learner axis
+    is sharded (the vmap runs inside the ``shard_map``, so the whole
+    grid is still one mesh program per (substrate, kind) group);
+    ``topology`` selects the byte accounting as in :func:`run`.
     """
     pcfgs = list(pcfgs)
     n = len(pcfgs)
@@ -323,6 +557,7 @@ def sweep(
     d = X.shape[3] if data_batched else X.shape[2]
     for sub in set(subs):
         sub.validate(T, m, d)
+    axes = _resolve_mesh(mesh, topology, m)
 
     losses = np.zeros((n, T), np.float32)
     errors = np.zeros((n, T), np.float32)
@@ -338,13 +573,15 @@ def sweep(
     for (sub, kind), idx in sorted(
             by_group.items(),
             key=lambda kv: (PROTOCOL_KIND_CODES[kv[0][1]], repr(kv[0][0]))):
-        fn = _jitted(sub, kind, bool(record_divergence), True, data_batched)
+        fn = _jitted(sub, kind, bool(record_divergence), True, data_batched,
+                     topology, mesh, axes)
         params = _stack_params([pcfgs[i] for i in idx])
         Xg = jnp.asarray(X[idx]) if data_batched else jnp.asarray(X)
         Yg = jnp.asarray(Y[idx]) if data_batched else jnp.asarray(Y)
         outs = fn(params, Xg, Yg)
         lo, er, nb, dv, fl, ep = (np.asarray(o) for o in outs)
-        losses[idx], errors[idx], flags[idx] = lo, er, fl
+        # (n, T, m) per-learner series -> (n, T), summed exactly as in run
+        losses[idx], errors[idx], flags[idx] = lo.sum(-1), er.sum(-1), fl
         round_bytes[idx], divs[idx], eps[idx] = nb, dv, ep
 
     keep_div = record_divergence or all(s.free_divergence for s in subs)

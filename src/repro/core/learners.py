@@ -211,7 +211,9 @@ def linear_update(
     cfg: LearnerConfig, state: LinearLearnerState, example: Tuple[Array, Array]
 ) -> Tuple[LinearLearnerState, Array]:
     x, y = example
-    yhat = state.w @ x + state.b
+    # multiply + reduce, not a dot: keeps the float result independent
+    # of the learner-axis layout (see rkhs.predict / DESIGN.md Sec. 9)
+    yhat = jnp.sum(state.w * x) + state.b
     ell, g = _loss_and_grad(cfg.loss, yhat, y)
 
     if cfg.algo == "linear_sgd":

@@ -48,8 +48,18 @@ def rff_params(spec: RFFSpec) -> Tuple[Array, Array]:
 
 def featurize(spec: RFFSpec, W: Array, b: Array, X: Array) -> Array:
     """phi(X): (..., d) -> (..., D).  Pure-jnp reference; see
-    repro.kernels.ops.rff_features for the Pallas path."""
-    proj = X @ W.T + b
+    repro.kernels.ops.rff_features for the Pallas path.
+
+    The projection is an explicit multiply + last-axis reduce rather
+    than ``X @ W.T``: a row's result is then independent of how many
+    rows share the call, which is what lets the mesh-sharded engine
+    (one learner slice per device) reproduce the single-device engine
+    bit-for-bit (DESIGN.md Sec. 9 — XLA's gemm kernels pick
+    row-count-dependent accumulation orders, gemv vs gemm).  The
+    materialized (..., D, d) intermediate is small at simulation scale;
+    the Pallas path owns the large-D regime.
+    """
+    proj = jnp.sum(X[..., None, :] * W, axis=-1) + b
     return jnp.sqrt(2.0 / spec.num_features) * jnp.cos(proj)
 
 

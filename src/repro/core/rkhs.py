@@ -126,10 +126,39 @@ def num_active(f: SVModel) -> Array:
     return jnp.sum(active_mask(f).astype(jnp.int32))
 
 
+def _gram_rows(spec: KernelSpec, X: Array, Y: Array) -> Array:
+    """``gram`` with the cross term as an explicit multiply + last-axis
+    reduce instead of ``X @ Y.T``.  Same formula (gaussian still uses
+    xx + yy - 2<x,y>), but a row's floats no longer depend on how many
+    rows share the call: XLA's gemm/gemv kernels pick row-count-
+    dependent accumulation orders, and the prediction path must be
+    bit-identical between the single-device engine (m learners in one
+    vmap) and the mesh-sharded engine (m/n per device) — DESIGN.md
+    Sec. 9.  The (n, budget, d) intermediate is fine at prediction
+    shapes (n is 1 in every driver); bulk Gram algebra keeps ``gram``.
+    """
+    X = X.astype(jnp.float32)
+    Y = Y.astype(jnp.float32)
+    cross = jnp.sum(X[:, None, :] * Y[None, :, :], axis=-1)
+    if spec.kind == "linear":
+        return cross
+    if spec.kind == "poly":
+        return (cross + spec.coef0) ** spec.degree
+    xx = jnp.sum(X * X, axis=-1)[:, None]
+    yy = jnp.sum(Y * Y, axis=-1)[None, :]
+    sq = jnp.maximum(xx + yy - 2.0 * cross, 0.0)
+    return jnp.exp(-spec.gamma * sq)
+
+
 def predict(spec: KernelSpec, f: SVModel, X: Array) -> Array:
-    """f(X) = K(X, S) alpha, masking inactive slots."""
+    """f(X) = K(X, S) alpha, masking inactive slots.
+
+    Evaluated shape-independently (``_gram_rows`` + multiply-reduce):
+    this is the value every driver's losses and service errors are
+    measured from, so it must not change with the learner-axis layout.
+    """
     a = jnp.where(active_mask(f), f.alpha, 0.0)
-    return gram(spec, X, f.sv) @ a
+    return jnp.sum(_gram_rows(spec, X, f.sv) * a, axis=-1)
 
 
 def norm_sq(spec: KernelSpec, f: SVModel) -> Array:

@@ -48,11 +48,18 @@ class SimResult:
 
     @property
     def quiescence_round(self) -> Optional[int]:
-        """First round after which no further synchronization happened."""
+        """First round index q from which the run is synchronization-
+        free through the end — the boundary convention shared with
+        ``criterion.quiescent`` (which is defined in terms of this
+        property): ``0`` when the run never synchronized, ``s + 1``
+        when the last sync landed at round ``s < T - 1``, and ``None``
+        when a sync landed on the final round (quiescence was never
+        observed within the run)."""
         if len(self.sync_rounds) == 0:
             return 0
         last = int(self.sync_rounds[-1])
-        return last if last < len(self.cumulative_loss) - 1 else None
+        T = len(self.cumulative_loss)
+        return last + 1 if last + 1 <= T - 1 else None
 
     @classmethod
     def from_round_series(
@@ -156,10 +163,14 @@ def run_kernel_simulation(
 
     for t in range(T):
         xb = jnp.asarray(X[t]); yb = jnp.asarray(Y[t])
-        # service quality before update (prediction errors)
+        # service quality before update (prediction errors); the hinge
+        # decision rule is deterministic at a zero margin (yhat >= 0
+        # predicts +1), identically in every driver — see
+        # engine._err_terms
         yhat = vpredict(stacked.model, xb)
         if lcfg.loss == "hinge":
-            total_err += float(jnp.sum((jnp.sign(yhat) != yb)))
+            pred = jnp.where(yhat >= 0, 1.0, -1.0)
+            total_err += float(jnp.sum(pred != yb))
         else:
             total_err += float(jnp.sum((yhat - yb) ** 2))
 
@@ -246,13 +257,16 @@ def run_linear_simulation(
     total_loss = 0.0; total_err = 0.0
     nparams = d + 1
 
-    vpredict = jax.jit(jax.vmap(lambda s, x: s.w @ x + s.b))
+    # multiply + reduce, matching the substrate layer's layout-
+    # independent prediction floats (rkhs.predict rationale)
+    vpredict = jax.jit(jax.vmap(lambda s, x: jnp.sum(s.w * x) + s.b))
 
     for t in range(T):
         xb = jnp.asarray(X[t]); yb = jnp.asarray(Y[t])
         yhat = vpredict(stacked, xb)
         if lcfg.loss == "hinge":
-            total_err += float(jnp.sum((jnp.sign(yhat) != yb)))
+            pred = jnp.where(yhat >= 0, 1.0, -1.0)   # zero margin -> +1
+            total_err += float(jnp.sum(pred != yb))
         else:
             total_err += float(jnp.sum((yhat - yb) ** 2))
 

@@ -128,6 +128,17 @@ class Substrate:
     def dist_to_ref(self, models, ref) -> Array:
         raise NotImplementedError
 
+    def dist_to_ref_each(self, models, ref_stacked) -> Array:
+        """Per-learner distance to a PER-LEARNER reference slice.
+
+        The mesh-sharded engine (DESIGN.md Sec. 9) keeps the Sec. 3
+        stacked reference sliced next to each learner, so the dynamic
+        local condition is a purely device-local reduction:
+        ``ref_stacked`` carries the same leading learner axis as
+        ``models`` (every slice holds the same synchronized model).
+        """
+        return jax.vmap(self.dist_one)(models, ref_stacked)
+
     def divergence(self, models) -> Array:
         raise NotImplementedError
 
@@ -136,6 +147,14 @@ class Substrate:
 
     def sync_payload(self, models, ledger):
         """Sec. 3 bytes of one synchronization -> (int32 bytes, ledger)."""
+        raise NotImplementedError
+
+    def allreduce_sync_bytes(self, m: int) -> int:
+        """TOTAL ring bytes of one mesh synchronization
+        (``topology="allreduce"``, DESIGN.md Sec. 9): the cost of the
+        collective that replaces the coordinator's up/downloads when
+        the learner axis is sharded.  A host-side constant — unlike
+        ``sync_payload`` it never depends on the rounds seen."""
         raise NotImplementedError
 
     def validate(self, T: int, m: int, d: int) -> None:
@@ -323,6 +342,14 @@ class SVSubstrate(Substrate):
         bm = accounting.ByteModel(dim=self.lcfg.dim)
         return accounting.device_sync_bytes_kernel(bm, models.sv_id, ledger)
 
+    def allreduce_sync_bytes(self, m: int) -> int:
+        # SV expansions have no slot alignment across learners, so the
+        # mesh sync is a ring all-gather of the m budget-tau stacks;
+        # each slot ships its vector + id (B_x) and its coefficient.
+        bm = accounting.ByteModel(dim=self.lcfg.dim)
+        slot = bm.B_x + bm.dtype_bytes
+        return accounting.allgather_bytes(self.lcfg.budget * slot, m)
+
     # -- node face ----------------------------------------------------------
 
     def init_node(self, idx: int):
@@ -492,6 +519,10 @@ class _PrimalSubstrate(Substrate):
         nbytes = accounting.sync_bytes_linear(self.num_params, m)
         return jnp.asarray(nbytes, jnp.int32), ledger
 
+    def allreduce_sync_bytes(self, m: int) -> int:
+        # fixed-size primal vectors reduce-scatter + all-gather
+        return accounting.allreduce_bytes(self.num_params, m)
+
     def dist_one(self, model, ref) -> Array:
         return jnp.sum((model.w - ref.w) ** 2) + (model.b - ref.b) ** 2
 
@@ -581,7 +612,9 @@ class LinearSubstrate(_PrimalSubstrate):
         return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
     def predict(self, models, x: Array) -> Array:
-        return jax.vmap(lambda s, xi: s.w @ xi + s.b)(models, x)
+        # multiply + reduce, not a dot — layout-independent floats
+        # (rkhs.predict has the full rationale; DESIGN.md Sec. 9)
+        return jnp.sum(models.w * x, axis=-1) + models.b
 
     def update(self, state, example):
         return jax.vmap(functools.partial(learners.update, self.lcfg))(
@@ -594,7 +627,7 @@ class LinearSubstrate(_PrimalSubstrate):
         return learners.update(self.lcfg, state, example)
 
     def predict_one(self, model, x: Array) -> Array:
-        return model.w @ x + model.b
+        return jnp.sum(model.w * x) + model.b
 
     def init_reference(self):
         return learners.init_linear_state(self.lcfg)
@@ -666,7 +699,7 @@ class RFFSubstrate(_PrimalSubstrate):
         return jnp.sum(models.w * Z, axis=-1) + models.b
 
     def _round_with_features(self, st, z, y):
-        yhat = st.w @ z + st.b
+        yhat = jnp.sum(st.w * z) + st.b   # layout-independent floats
         ell, g = learners.loss_and_grad(self.loss, yhat, y)
         w = (1.0 - self.eta * self.lam) * st.w - self.eta * g * z
         b = st.b - self.eta * g
@@ -691,7 +724,7 @@ class RFFSubstrate(_PrimalSubstrate):
 
     def predict_one(self, model, x: Array) -> Array:
         z = self._phi(x[None])[0]
-        return model.w @ z + model.b
+        return jnp.sum(model.w * z) + model.b
 
     # the feature map dominates a node round: featurize once, share it
     # between the service-error prediction and the update

@@ -28,6 +28,16 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_learner_mesh(n: int = 0):
+    """1-D mesh with the ``learners`` axis over n devices (default:
+    all available) — the axis the mesh-sharded scan engine shards the
+    m-learner dim over (``engine.run(..., mesh=...)``, DESIGN.md
+    Sec. 9).  The learner count m must divide evenly over n."""
+    if n == 0:
+        n = len(jax.devices())
+    return jax.make_mesh((n,), ("learners",))
+
+
 def data_axes(mesh) -> Tuple[str, ...]:
     """The learner/batch axes of a mesh (everything except 'model')."""
     return tuple(a for a in mesh.axis_names if a != "model")

@@ -158,6 +158,20 @@ def batch_pspec(batch: PyTree, learner_axes: Tuple[str, ...]) -> PyTree:
     return jax.tree.map(spec_for, batch)
 
 
+def stream_pspec(learner_axes: Tuple[str, ...]) -> P:
+    """Protocol streams are (T, m, ...) — round dim replicated, learner
+    dim (axis 1) over the learner axes, feature dims local.  Used to
+    pre-place X/Y for the mesh-sharded engine (DESIGN.md Sec. 9) so
+    the stream never bounces through one device:
+
+        sh = NamedSharding(mesh, stream_pspec(("learners",)))
+        engine.run(sub, pcfg, jax.device_put(X, sh),
+                   jax.device_put(Y, sh), mesh=mesh)
+    """
+    ax = learner_axes if len(learner_axes) > 1 else learner_axes[0]
+    return P(None, ax)
+
+
 def to_shardings(mesh, pspecs: PyTree) -> PyTree:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), pspecs,

@@ -103,7 +103,10 @@ class LearnerNode:
         # work between the two (e.g. the RFF feature map)
         self.state, loss, yhat = self.ops.round(self.state, (x, y))
         if self.sub.loss == "hinge":
-            self.err_out[t, self.idx] = float(jnp.sign(yhat) != y)
+            # zero margin predicts +1, identically in every driver
+            # (engine._err_terms / the serial oracle)
+            pred = 1.0 if float(yhat) >= 0.0 else -1.0
+            self.err_out[t, self.idx] = float(pred != float(y))
         else:
             self.err_out[t, self.idx] = float((yhat - y) ** 2)
         self.loss_out[t, self.idx] = float(loss)

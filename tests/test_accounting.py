@@ -1,0 +1,122 @@
+"""Byte-model semantics pins (core/accounting.py).
+
+Three contracts that previously had no direct tests:
+
+- ``allreduce_bytes`` returns the m-participant ring TOTAL
+  ``2 (m-1) |theta| B`` (per-participant cost is ``2 (m-1)/m |theta|
+  B`` — a caller comparing against coordinator totals must NOT divide
+  or multiply by m again), related to ``sync_bytes_linear`` by the
+  ratio ``(m-1)/m`` per direction;
+- the ``device_sync_bytes_kernel`` int32 guard raises exactly at the
+  documented ``m * tau * (B_alpha + B_x) * (m + 1) >= 2**31`` boundary;
+- host-side cumulative byte accounting stays int64 end to end
+  (``SweepResult`` / ``SimResult``).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accounting, engine
+from repro.core.accounting import ByteModel
+from repro.core.learners import LearnerConfig
+from repro.core.protocol import ProtocolConfig
+from repro.data import separable_stream
+
+
+# ---------------------------------------------------------------------------
+# allreduce_bytes: total semantics, pinned against sync_bytes_linear
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [2, 3, 8, 64])
+@pytest.mark.parametrize("num_params", [9, 257])
+def test_allreduce_bytes_is_ring_total(m, num_params):
+    ring = accounting.allreduce_bytes(num_params, m)
+    coord = accounting.sync_bytes_linear(num_params, m)
+    # total 2 (m-1) |theta| B, NOT the per-participant 2 (m-1)/m |theta| B
+    assert ring == 2 * (m - 1) * num_params * 4
+    # per direction the ring moves an (m-1)/m fraction of the
+    # coordinator's bytes: ring/coord == (m-1)/m exactly
+    assert ring * m == coord * (m - 1)
+    assert ring < coord
+
+
+def test_allreduce_bytes_degenerate():
+    assert accounting.allreduce_bytes(100, 1) == 0
+    assert accounting.allreduce_bytes(100, 0) == 0
+    assert accounting.allgather_bytes(100, 1) == 0
+
+
+def test_allgather_bytes_total():
+    # each of m participants receives the other m-1 shards
+    assert accounting.allgather_bytes(10, 4) == 4 * 3 * 10
+
+
+# ---------------------------------------------------------------------------
+# device ledger int32 guard: exact boundary
+# ---------------------------------------------------------------------------
+
+
+def _worst(m, tau, bm):
+    return m * tau * (bm.B_alpha + bm.B_x) * (m + 1)
+
+
+def test_overflow_guard_boundary_exact():
+    # B_alpha + B_x = 4*dim + 12; dim=253 makes it exactly 1024, so
+    # m=1, tau=2**20 puts the worst case at exactly 2**31 (must raise)
+    # and tau=2**20 - 1 one step below it (must run).
+    bm = ByteModel(dim=253)
+    assert bm.B_alpha + bm.B_x == 1024
+    m, tau = 1, 2**20
+    assert _worst(m, tau, bm) == 2**31
+
+    ids = np.full((m, tau), -1, np.int32)
+    ledger = accounting.device_ledger_init(m * tau)
+    with pytest.raises(ValueError, match="int32"):
+        accounting.device_sync_bytes_kernel(bm, jnp.asarray(ids), ledger)
+
+    tau_ok = 2**20 - 1
+    assert _worst(m, tau_ok, bm) < 2**31
+    ledger = accounting.device_ledger_init(m * tau_ok)
+    b, ledger = accounting.device_sync_bytes_kernel(
+        bm, jnp.asarray(ids[:, :tau_ok]), ledger)
+    assert int(b) == 0  # all slots empty: nothing shipped
+
+
+def test_overflow_guard_boundary_multi_learner():
+    # m=2: worst = 6 * tau * (B_alpha + B_x); dim=100000 crosses 2**31
+    # between tau=894 and tau=895.
+    bm = ByteModel(dim=100_000)
+    m = 2
+    assert _worst(m, 894, bm) < 2**31 <= _worst(m, 895, bm)
+
+    ids = np.full((m, 895), -1, np.int32)
+    with pytest.raises(ValueError, match="int32"):
+        accounting.device_sync_bytes_kernel(
+            bm, jnp.asarray(ids), accounting.device_ledger_init(m * 895))
+    ids = np.arange(m * 894, dtype=np.int32).reshape(m, 894)
+    b, _ = accounting.device_sync_bytes_kernel(
+        bm, jnp.asarray(ids), accounting.device_ledger_init(m * 894))
+    host = accounting.CommunicationLedger(bm)
+    assert int(b) == host.record_kernel_sync([ids[i] for i in range(m)], 0)
+
+
+# ---------------------------------------------------------------------------
+# int64 on the host side, end to end
+# ---------------------------------------------------------------------------
+
+
+def test_cumulative_bytes_stay_int64_through_sweep():
+    lcfg = LearnerConfig(algo="linear_sgd", loss="hinge", eta=0.1,
+                         lam=0.001, dim=6)
+    X, Y = separable_stream(T=30, m=3, d=6, seed=0)
+    grid = [ProtocolConfig(kind="continuous"),
+            ProtocolConfig(kind="periodic", period=5)]
+    sw = engine.sweep(lcfg, grid, X, Y)
+    assert sw.round_bytes.dtype == np.int64
+    for i in range(len(grid)):
+        res = sw[i]
+        assert res.cumulative_bytes.dtype == np.int64
+        assert isinstance(res.total_bytes, int)
+        # per-round int32 device values, host cumsum in int64
+        assert res.cumulative_bytes[-1] == res.total_bytes

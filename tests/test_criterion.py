@@ -34,6 +34,46 @@ def test_periodic_never_quiescent():
     assert not criterion.quiescent(res, window_frac=0.25)
 
 
+def _result_with_syncs(T, sync_rounds):
+    """SimResult with syncs at exactly the given rounds."""
+    flags = np.zeros(T, bool)
+    flags[list(sync_rounds)] = True
+    nbytes = np.where(flags, 100, 0)
+    return simulation.SimResult.from_round_series(
+        np.zeros(T), np.zeros(T), nbytes, np.zeros(T), flags, np.zeros(0))
+
+
+def test_quiescence_round_boundary_convention():
+    """One convention, both definitions (ISSUE 4 satellite): q is the
+    first round from which the run is sync-free; 0 with no syncs; None
+    when the final round syncs (never observed quiescent)."""
+    T = 10
+    assert _result_with_syncs(T, []).quiescence_round == 0
+    assert _result_with_syncs(T, [3]).quiescence_round == 4
+    assert _result_with_syncs(T, [0, 8]).quiescence_round == 9
+    assert _result_with_syncs(T, [T - 1]).quiescence_round is None
+    # degenerate one-round runs
+    assert _result_with_syncs(1, []).quiescence_round == 0
+    assert _result_with_syncs(1, [0]).quiescence_round is None
+
+
+def test_quiescent_honors_quiescence_round_convention():
+    """quiescent <=> quiescence was observed (q not None) and arrived
+    no later than the trailing-window start w = ceil((1-frac)*T)."""
+    T, frac = 10, 0.2       # window = rounds {8, 9}
+    assert criterion.quiescent(_result_with_syncs(T, []), frac)
+    # sync just OUTSIDE the window (round 7): quiescent, q == w == 8
+    res = _result_with_syncs(T, [7])
+    assert res.quiescence_round == 8
+    assert criterion.quiescent(res, frac)
+    # sync just INSIDE the window (round 8): not quiescent
+    res = _result_with_syncs(T, [8])
+    assert res.quiescence_round == 9
+    assert not criterion.quiescent(res, frac)
+    # sync on the final round: q is None, never quiescent
+    assert not criterion.quiescent(_result_with_syncs(T, [T - 1]), frac)
+
+
 def test_consistency_trend_bounded():
     """L_dynamic(t) / L_serial(mt) stays bounded (consistency audit)."""
     T, m, d = 250, 4, 8

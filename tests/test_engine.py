@@ -204,6 +204,54 @@ def test_engine_matches_linear_oracle(pcfg):
     assert len(res_eng.eps_history) == 0
 
 
+def test_topology_allreduce_same_decisions_ring_pricing():
+    """topology="allreduce" swaps the Sec. 3 coordinator pricing for
+    the mesh ring total (DESIGN.md Sec. 9) without touching a single
+    sync decision — with or without a mesh."""
+    from repro.core import accounting
+    from repro.core.substrate import substrate_of
+
+    X, Y = susy_stream(T=60, m=M, d=D, seed=2)
+    for learner in [_kernel_cfg(),
+                    LearnerConfig(algo="linear_sgd", loss="hinge", eta=0.1,
+                                  lam=0.001, dim=D)]:
+        sub = substrate_of(learner)
+        pcfg = ProtocolConfig(kind="dynamic", delta=1.0)
+        rc = engine.run(learner, pcfg, X, Y)
+        ra = engine.run(learner, pcfg, X, Y, topology="allreduce")
+        np.testing.assert_array_equal(rc.sync_rounds, ra.sync_rounds)
+        np.testing.assert_array_equal(rc.cumulative_loss, ra.cumulative_loss)
+        assert ra.num_syncs > 0
+        assert ra.total_bytes == ra.num_syncs * sub.allreduce_sync_bytes(M)
+    # the primal ring total IS the fixed accounting.allreduce_bytes
+    lin = substrate_of(LearnerConfig(algo="linear_sgd", dim=D))
+    assert lin.allreduce_sync_bytes(M) == accounting.allreduce_bytes(D + 1, M)
+
+
+def test_round0_zero_margin_predicts_positive_in_every_driver():
+    """The hinge decision rule is deterministic at a zero margin
+    (yhat >= 0 -> +1): an untrained all-zero model errs exactly on the
+    negative labels at round 0 — not on every label — identically in
+    the engine, the serial oracle, and the async runtime."""
+    from repro.runtime import (AsyncProtocolConfig, SystemConfig,
+                               run_async_simulation)
+
+    X, Y = susy_stream(T=3, m=M, d=D, seed=11)
+    Y[0] = np.asarray([1.0, -1.0, 1.0], np.float32)   # mixed round-0 labels
+    expected0 = float((Y[0] == -1).sum())
+    lcfg = _kernel_cfg()
+    pcfg = ProtocolConfig(kind="none")
+
+    res_eng = engine.run(lcfg, pcfg, X, Y)
+    res_loop = simulation.run_kernel_simulation(lcfg, pcfg, X, Y)
+    res_async = run_async_simulation(
+        lcfg, AsyncProtocolConfig(kind="dynamic", delta=1e9), X, Y,
+        sys_cfg=SystemConfig(), record_divergence=False)
+    assert res_eng.cumulative_errors[0] == expected0
+    assert res_loop.cumulative_errors[0] == expected0
+    assert res_async.cumulative_errors[0] == expected0
+
+
 def test_engine_divergence_recording_is_optional():
     X, Y = susy_stream(T=30, m=M, d=D, seed=7)
     res = engine.run(_kernel_cfg(), ProtocolConfig(kind="dynamic", delta=2.0),

@@ -88,3 +88,8 @@ def test_cache_pspec_small_batch_replicated():
                          model_size=16)
     k_spec = ps[0]["b0"].k
     assert k_spec == P(None, None, "model", None, None)
+
+
+def test_stream_pspec_learner_dim():
+    assert shd.stream_pspec(("learners",)) == P(None, "learners")
+    assert shd.stream_pspec(("pod", "data")) == P(None, ("pod", "data"))
