@@ -1,0 +1,153 @@
+"""Online serving suite (DESIGN.md Sec. 10, EXPERIMENTS.md §Serving).
+
+The serving engine's two-sided contract, measured:
+
+- **protocol side** — the same labeled stream pushed through
+  ``serving.serve_stream`` (with query traffic riding along) must
+  reproduce ``engine.run`` bit-for-bit on losses and integer-exactly
+  on Sec. 3 bytes;
+- **serving side** — micro-batching must pay: answering a bucket of B
+  requests with ONE padded ``predict_batch`` call must beat B
+  one-at-a-time calls by a clear multiple (per-call dispatch is the
+  serving engine's whole reason to bucket).
+
+Registered claims (asserted here, grepped by CI):
+
+- ``serving_losses_identical`` / ``serving_bytes_identical`` — the
+  parity contract over {SV, RFF} x dynamic on the bench stream;
+- ``batched_predict_faster_2x`` — the measured batched-vs-solo
+  speedup at bucket 32 is at least 2x (in practice far higher; the
+  gate is deliberately loose because shared CI runners are noisy —
+  the honest multiple is in the ``speedup`` column).
+
+Latency percentiles / queue depths are reported as derived columns,
+never gated — they are simulated-timeline quantities, deterministic
+under seed, but their *interest* is the trade-off shape, not a
+threshold.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.core.learners import LearnerConfig
+from repro.core.protocol import ProtocolConfig
+from repro.core.rff import RFFSpec
+from repro.core.rkhs import KernelSpec
+from repro.core.substrate import RFFSubstrate, substrate_of
+from repro.data import susy_stream
+from repro.runtime import SystemConfig
+from repro.serving import serve_stream
+
+from .common import Row
+
+T, M, D_IN = 600, 4, 8
+
+
+def _kernel_cfg():
+    return LearnerConfig(algo="kernel_sgd", loss="hinge", eta=0.5, lam=0.01,
+                         budget=64, kernel=KernelSpec("gaussian", gamma=0.3),
+                         dim=D_IN)
+
+
+def _serve_row(name, learner, pcfg, X, Y):
+    t = X.shape[0]
+    res_ref = engine.run(learner, pcfg, X, Y)
+    wall0 = time.perf_counter()
+    res = serve_stream(
+        learner, pcfg, X, Y, queries_per_round=4.0,
+        sys_cfg=SystemConfig(seed=0, compute_jitter=0.3, base_latency=0.05,
+                             bandwidth=1e7))
+    wall = time.perf_counter() - wall0
+    loss_ok = bool(np.array_equal(res_ref.cumulative_loss,
+                                  res.sim.cumulative_loss))
+    bytes_ok = bool(np.array_equal(res_ref.cumulative_bytes,
+                                   res.sim.cumulative_bytes))
+    pct = res.latency_percentiles()
+    row = Row(
+        f"serve/{name}", wall * 1e6 / t,
+        f"requests={res.num_requests};rounds={res.rounds};"
+        f"syncs={res.num_syncs};bytes={res.total_bytes};"
+        f"p50={pct['p50']:.3f};p90={pct['p90']:.3f};p99={pct['p99']:.3f};"
+        f"mean_queue_depth={float(res.queue_depth.mean()):.1f};"
+        f"losses_identical={loss_ok};bytes_identical={bytes_ok}")
+    return row, loss_ok, bytes_ok
+
+
+def _batched_predict_speedup(X, Y, bucket=32, reps=20):
+    """Warm batched bucket-B predict vs B warm one-at-a-time calls.
+    The stream labels Y train the models through the protocol step so
+    predict runs against non-trivial expansions."""
+    sub = substrate_of(_kernel_cfg())
+    step = jax.jit(engine.make_protocol_step(sub, "dynamic"))
+    params = engine.params_of(ProtocolConfig(kind="dynamic", delta=2.0))
+    carry = engine.init_protocol_carry(sub, X.shape[1])
+    for t in range(min(X.shape[0], 100)):
+        carry, _ = step(params, carry,
+                        (jnp.asarray(X[t]), jnp.asarray(Y[t]),
+                         jnp.asarray(t, jnp.int32)))
+    models = sub.models_of(carry[0])
+
+    rng = np.random.default_rng(0)
+    lids = jnp.asarray(rng.integers(0, X.shape[1], bucket).astype(np.int32))
+    Xb = jnp.asarray(X[:bucket, 0].astype(np.float32))
+    predict = jax.jit(sub.predict_batch)
+    predict(models, lids, Xb).block_until_ready()             # warm B
+    predict(models, lids[:1], Xb[:1]).block_until_ready()     # warm 1
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        predict(models, lids, Xb).block_until_ready()
+    batched = (time.perf_counter() - t0) / reps
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for i in range(bucket):
+            predict(models, lids[i:i + 1], Xb[i:i + 1]).block_until_ready()
+    solo = (time.perf_counter() - t0) / reps
+    return batched, solo, solo / batched
+
+
+def run(quick: bool = False):
+    t = 150 if quick else T
+    X, Y = susy_stream(T=t, m=M, d=D_IN, seed=0)
+    pcfg = ProtocolConfig(kind="dynamic", delta=2.0)
+    rows = []
+
+    ok_loss = ok_bytes = True
+    for name, learner in (
+            ("sv_dynamic", _kernel_cfg()),
+            ("rff_dynamic", RFFSubstrate(
+                spec=RFFSpec(dim=D_IN, num_features=128, gamma=0.3, seed=0)))):
+        row, lo, by = _serve_row(name, learner, pcfg, X, Y)
+        rows.append(row)
+        ok_loss &= lo
+        ok_bytes &= by
+
+    bucket = 32
+    batched_s, solo_s, speedup = _batched_predict_speedup(X, Y, bucket=bucket)
+    faster = bool(speedup >= 2.0)
+    assert faster, (
+        f"bucket-{bucket} batched predict only {speedup:.2f}x faster than "
+        f"{bucket} one-at-a-time calls ({batched_s*1e6:.0f}us vs "
+        f"{solo_s*1e6:.0f}us)")
+    rows.append(Row(
+        "serve/batched_predict", batched_s * 1e6,
+        f"bucket={bucket};solo_us={solo_s*1e6:.0f};speedup={speedup:.1f}x"))
+
+    assert ok_loss and ok_bytes, "serving parity violated"
+    rows.append(Row(
+        "serve/claims", 0.0,
+        f"serving_losses_identical={ok_loss};"
+        f"serving_bytes_identical={ok_bytes};"
+        f"batched_predict_faster_2x={faster}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run(quick=True))

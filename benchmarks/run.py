@@ -13,8 +13,8 @@ import traceback
 
 from . import (bench_adaptive, bench_async, bench_bounds, bench_comm_time,
                bench_compression, bench_engine, bench_kernels,
-               bench_lm_protocol, bench_rff, bench_roofline, bench_stock,
-               bench_tradeoff)
+               bench_lm_protocol, bench_rff, bench_roofline, bench_serve,
+               bench_stock, bench_tradeoff)
 from .common import print_rows
 
 SUITES = {
@@ -26,6 +26,7 @@ SUITES = {
     "bounds": bench_bounds,            # Thm.4 / Prop.5 / Prop.6 / Thm.7
     "compression": bench_compression,  # Sec. 3/4 ablation
     "rff": bench_rff,                  # Sec. 4 future-work
+    "serve": bench_serve,              # online serving (DESIGN.md 10)
     "adaptive": bench_adaptive,        # Sec. 4 open problem (beyond paper)
     "lm_protocol": bench_lm_protocol,  # the technique at LM scale (measured)
     "kernels": bench_kernels,          # Pallas hot-spots

@@ -30,6 +30,13 @@ from .rkhs import KernelSpec, SVModel, active_mask, gram
 
 Array = jnp.ndarray
 
+#: The repo-wide default compression method.  Every entry point that
+#: compresses a synchronized model — ``SVSubstrate.compress_method``,
+#: ``substrate_of``'s LearnerConfig resolution, the legacy simulation
+#: drivers — defaults to this one name, so "what does None mean"
+#: resolves to a single constant instead of per-call-site comments.
+DEFAULT_METHOD = "truncate"
+
 
 def _top_tau_mask(f: SVModel, tau: int) -> Array:
     """Boolean mask of the tau active slots with the largest |alpha|."""
@@ -113,7 +120,7 @@ def project(
 
 
 def compress(
-    spec: KernelSpec, f: SVModel, tau: int, method: str = "truncate"
+    spec: KernelSpec, f: SVModel, tau: int, method: str = DEFAULT_METHOD
 ) -> Tuple[SVModel, Array]:
     if method == "truncate":
         return truncate(spec, f, tau)

@@ -107,12 +107,18 @@ class ScanParams(NamedTuple):
     mini_batch: Array
 
 
-def _params_of(pcfg: ProtocolConfig) -> ScanParams:
+def params_of(pcfg: ProtocolConfig) -> ScanParams:
+    """The traced-scalar view of one ProtocolConfig — the companion of
+    :func:`make_protocol_step`, so external step drivers (the serving
+    engine) share the scan engine's exact dtype conversion."""
     return ScanParams(
         delta=jnp.asarray(pcfg.delta, jnp.float32),
         period=jnp.asarray(pcfg.period, jnp.int32),
         mini_batch=jnp.asarray(pcfg.mini_batch, jnp.int32),
     )
+
+
+_params_of = params_of
 
 
 def _stack_params(pcfgs: Sequence[ProtocolConfig]) -> ScanParams:
@@ -271,18 +277,77 @@ def _stack_ref(ref, m: int):
         lambda v: jnp.broadcast_to(v[None], (m,) + v.shape), ref)
 
 
+def make_protocol_step(sub: Substrate, kind: str, *,
+                       record_divergence: bool = False,
+                       topology: str = "coordinator"):
+    """One protocol round as a standalone function — EXACTLY the scan
+    body ``run`` / ``sweep`` iterate.
+
+    Returns ``step(params, carry, xs) -> (carry, outs)`` with
+    ``carry = (stacked learner state, reference, ledger)``,
+    ``xs = (x (m, d), y (m,), t int32)`` and
+    ``outs = (loss (m,), err (m,), bytes, divergence, sync_flag, eps)``.
+
+    The online serving engine (repro/serving, DESIGN.md Sec. 10) jits
+    this step and drives it one labeled round at a time between predict
+    micro-batches: because it is the same function object the scan
+    engine compiles, the serving path's losses, sync decisions, and
+    Sec. 3 bytes are bit-identical to ``run`` by construction — the
+    same already-proven discipline by which the serial loop driver
+    (core/simulation.py) matches the scan engine while composing
+    separately-jitted per-round ops.
+    """
+    if kind not in PROTOCOL_KIND_CODES:
+        raise ValueError(f"unknown protocol kind {kind!r}")
+    if topology not in TOPOLOGIES:
+        raise ValueError(f"unknown topology {topology!r}")
+    return _make_step(sub, kind, record_divergence, topology, axis=None)
+
+
+def init_protocol_carry(sub: Substrate, m: int):
+    """The round-0 scan carry of an m-learner system: freshly
+    initialized stacked learner states, the compressed average of those
+    blank models as the first reference, and an empty byte ledger —
+    shared by the scan core and the serving engine so both start from
+    the identical state."""
+    state0 = sub.init(m)
+    ref0, _ = sub.average_stacked(sub.models_of(state0))
+    return state0, ref0, sub.ledger_init(m)
+
+
+def assemble_sim_result(sub: Substrate, record_divergence: bool,
+                        loss: np.ndarray, err: np.ndarray,
+                        round_bytes: np.ndarray, div: np.ndarray,
+                        flags: np.ndarray, eps: np.ndarray) -> SimResult:
+    """Host-side post-processing of per-round step outputs — ONE code
+    path for :func:`run` and the serving engine's ``result()``.
+
+    ``loss`` / ``err`` arrive PER-LEARNER as (T, m) float32; the
+    cross-learner sum happens HERE, identically for every execution
+    mode — numpy's pairwise float32 sum over identical per-learner
+    values — which is what makes the mesh-sharded engine and the
+    serving path bit-for-bit with the single-device scan.  Divergence
+    and eps series are dropped when not recorded / not produced,
+    matching the substrate's ``free_divergence`` / ``has_eps`` flags.
+    """
+    keep_div = record_divergence or sub.free_divergence
+    return SimResult.from_round_series(
+        loss.sum(axis=1), err.sum(axis=1), round_bytes,
+        div if keep_div else np.zeros((0,)),
+        flags,
+        eps if sub.has_eps else np.zeros((0,)))
+
+
 def _scan_core(sub: Substrate, kind: str, record_divergence: bool,
                topology: str = "coordinator"):
     step = _make_step(sub, kind, record_divergence, topology, axis=None)
 
     def simulate(params: ScanParams, X: Array, Y: Array):
         T, m, d = X.shape
-        state0 = sub.init(m)
-        ref0, _ = sub.average_stacked(sub.models_of(state0))
-        ledger0 = sub.ledger_init(m)
+        carry0 = init_protocol_carry(sub, m)
         ts = jnp.arange(T, dtype=jnp.int32)
         _, outs = lax.scan(functools.partial(step, params),
-                           (state0, ref0, ledger0), (X, Y, ts))
+                           carry0, (X, Y, ts))
         return outs
 
     return simulate
@@ -423,9 +488,9 @@ def run(
     Y: np.ndarray,          # (T, m)
     *,
     sync_budget: Optional[int] = None,
-    compress_method: Optional[str] = None,   # default "truncate"
+    compress_method: Optional[str] = None,   # None -> substrate's own
     record_divergence: bool = False,
-    backend: Optional[str] = None,           # default "reference"
+    backend: Optional[str] = None,           # None -> substrate's own
     mesh: Optional[Mesh] = None,
     topology: str = "coordinator",
 ) -> SimResult:
@@ -436,6 +501,14 @@ def run(
     Substrate's own configuration).  Drop-in replacement for
     ``simulation.run_kernel_simulation`` / ``run_linear_simulation``
     with the exactness contract in the module docstring.
+
+    ``compress_method=None`` (like ``backend=None`` / the other
+    keyword sentinels) means "keep the substrate's own configuration":
+    for a passed Substrate, whatever it was built with; for a
+    LearnerConfig, the dataclass default
+    ``SVSubstrate.compress_method == compression.DEFAULT_METHOD``
+    ("truncate").  Pass an explicit string ("truncate" | "project") to
+    override either way.
 
     ``mesh``: a ``jax.sharding.Mesh`` to shard the learner axis over
     (``launch.mesh.make_learner_mesh``; m must divide evenly) — same
@@ -456,16 +529,8 @@ def run(
                  topology, mesh, axes)
     outs = fn(_params_of(pcfg), jnp.asarray(X), jnp.asarray(Y))
     loss, err, nbytes, div, flags, eps = (np.asarray(o) for o in outs)
-    # loss/err are (T, m) per-learner series; the cross-learner sum
-    # happens HERE, identically for every execution mode — numpy's
-    # pairwise float32 sum over identical per-learner values — which is
-    # what makes the mesh-sharded engine bit-for-bit with this one.
-    keep_div = record_divergence or sub.free_divergence
-    return SimResult.from_round_series(
-        loss.sum(axis=1), err.sum(axis=1), nbytes,
-        div if keep_div else np.zeros((0,)),
-        flags,
-        eps if sub.has_eps else np.zeros((0,)))
+    return assemble_sim_result(sub, bool(record_divergence),
+                               loss, err, nbytes, div, flags, eps)
 
 
 @dataclasses.dataclass
@@ -508,9 +573,9 @@ def sweep(
     Y: np.ndarray,          # (T, m) shared, or (n, T, m)
     *,
     sync_budget: Optional[int] = None,
-    compress_method: Optional[str] = None,   # default "truncate"
+    compress_method: Optional[str] = None,   # None -> substrate's own
     record_divergence: bool = False,
-    backend: Optional[str] = None,           # default "reference"
+    backend: Optional[str] = None,           # None -> substrate's own
     mesh: Optional[Mesh] = None,
     topology: str = "coordinator",
 ) -> SweepResult:
@@ -528,7 +593,9 @@ def sweep(
     With ``mesh`` the config axis stays vmapped while the learner axis
     is sharded (the vmap runs inside the ``shard_map``, so the whole
     grid is still one mesh program per (substrate, kind) group);
-    ``topology`` selects the byte accounting as in :func:`run`.
+    ``topology`` selects the byte accounting as in :func:`run`, and
+    ``compress_method=None`` / ``backend=None`` keep each substrate's
+    own configuration exactly as :func:`run` documents.
     """
     pcfgs = list(pcfgs)
     n = len(pcfgs)

@@ -104,7 +104,7 @@ def run_kernel_simulation(
     X: np.ndarray,          # (T, m, d) per-round per-learner inputs
     Y: np.ndarray,          # (T, m)
     sync_budget: Optional[int] = None,
-    compress_method: str = "truncate",
+    compress_method: str = compression.DEFAULT_METHOD,
 ) -> SimResult:
     """Run T rounds of m kernel learners under the given protocol.
 

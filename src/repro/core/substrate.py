@@ -113,6 +113,29 @@ class Substrate:
     def predict(self, models, x: Array) -> Array:
         raise NotImplementedError
 
+    def predict_batch(self, models, lids: Array, Xb: Array) -> Array:
+        """Serve a padded batch of predict requests from the stacked
+        models: request ``i`` is answered by learner ``lids[i]``'s
+        current model on input ``Xb[i]`` -> (n,) predictions.
+
+        This is the serving engine's hot path (DESIGN.md Sec. 10):
+        ``lids`` (n,) int32 home-learner ids, ``Xb`` (n, d) inputs, n a
+        *static bucket size* so each bucket keys one compile-cache
+        entry.  Padding rows repeat a learner id already present in
+        the batch (the serving engine uses the chunk's first, keeping
+        the gather shard-local under mesh routing) with zero inputs,
+        and are discarded by the caller.
+
+        Bit-exactness contract: row ``i``'s floats equal
+        ``predict_one(models[lids[i]], Xb[i])`` regardless of how many
+        rows share the call — guaranteed because every loss-feeding
+        contraction in this repo is an explicit multiply + last-axis
+        reduce (DESIGN.md Sec. 9), so a row's accumulation order never
+        depends on the batch around it (tests/test_serving.py pins it).
+        """
+        picked = jax.tree.map(lambda v: v[lids], models)
+        return jax.vmap(self.predict_one)(picked, Xb)
+
     def update(self, state, example):
         raise NotImplementedError
 
@@ -265,7 +288,7 @@ class SVSubstrate(Substrate):
 
     lcfg: LearnerConfig = dataclasses.field(default_factory=LearnerConfig)
     sync_budget: int = 0          # 0 -> lcfg.budget
-    compress_method: str = "truncate"
+    compress_method: str = compression.DEFAULT_METHOD
     backend: str = "reference"
 
     has_eps = True
@@ -698,6 +721,14 @@ class RFFSubstrate(_PrimalSubstrate):
         Z = self._phi(x)                               # (m, D)
         return jnp.sum(models.w * Z, axis=-1) + models.b
 
+    def predict_batch(self, models, lids: Array, Xb: Array) -> Array:
+        # featurize the whole bucket in one _phi call (the feature map
+        # dominates an RFF predict), then gather each request's home
+        # weights; per-row floats match predict_one because featurize
+        # and the dot are row-independent multiply+reduce ops.
+        Z = self._phi(Xb)                              # (n, D)
+        return jnp.sum(models.w[lids] * Z, axis=-1) + models.b[lids]
+
     def _round_with_features(self, st, z, y):
         yhat = jnp.sum(st.w * z) + st.b   # layout-independent floats
         ell, g = learners.loss_and_grad(self.loss, yhat, y)
@@ -764,6 +795,14 @@ def substrate_of(
     :class:`RFFSpec` (-> :class:`RFFSubstrate` with the default SGD
     hyperparameters).  An override the resolved substrate type has no
     field for raises ValueError rather than being dropped.
+
+    ``None`` semantics of the keyword sentinels: ``None`` means "keep
+    the substrate's own configuration" — for a passed :class:`Substrate`
+    that is whatever it was built with; for a :class:`LearnerConfig` /
+    :class:`RFFSpec` it is the dataclass default, i.e.
+    ``compress_method=None`` resolves to
+    ``compression.DEFAULT_METHOD`` ("truncate"), ``backend=None`` to
+    "reference", and ``sync_budget=None`` to the learner budget tau.
     """
     overrides = {}
     if sync_budget is not None:
@@ -779,10 +818,11 @@ def substrate_of(
         sub = learner
     elif isinstance(learner, LearnerConfig):
         if learner.is_kernel:
-            return SVSubstrate(lcfg=learner,
-                               sync_budget=int(sync_budget or learner.budget),
-                               compress_method=compress_method or "truncate",
-                               backend=backend or "reference")
+            return SVSubstrate(
+                lcfg=learner,
+                sync_budget=int(sync_budget or learner.budget),
+                compress_method=compress_method or compression.DEFAULT_METHOD,
+                backend=backend or "reference")
         # linear models have no sync budget / compression: the legacy
         # drivers accepted and ignored these, so the resolver does too
         return LinearSubstrate(lcfg=learner, backend=backend or "reference")

@@ -1,20 +1,76 @@
-"""Serving steps (prefill / decode) used by the dry-run and the
-serving engine.
+"""Serving launch surface: the kernel serving engine on a learner
+mesh, plus the LM prefill/decode steps the dry-run lowers.
 
-decode_32k / long_500k lower ``serve_step``: ONE new token against a
-context-length KV cache (or SSM/LRU state), per the assignment.
+Kernel serving (DESIGN.md Sec. 10)
+----------------------------------
+``make_kernel_serving_engine`` is the mesh-aware constructor for
+``repro.serving.KernelServingEngine``: it builds the 1-D learner mesh
+(``launch.mesh.make_learner_mesh``) over the visible devices, places
+the stacked learner models with a learner-axis ``NamedSharding``, and
+the engine then routes every predict request to its *home shard* —
+per-tick micro-batches never mix learners from different shards, so
+the model gather inside ``Substrate.predict_batch`` stays shard-local.
+The protocol view remains bit-identical to the unmeshed engine
+(tests/test_serving.py runs the routed path on forced host devices).
+
+LM serving (DESIGN.md Sec. 4)
+-----------------------------
+``make_prefill_step`` / ``make_decode_step`` build the jitted steps of
+the LM token path: decode_32k / long_500k lower ``serve_step`` — ONE
+new token against a context-length KV cache (or SSM/LRU state).  The
+continuous-batching LM engine lives in ``repro.serving.lm``.
 """
 from __future__ import annotations
 
 from typing import Any
 
-import jax
 import jax.numpy as jnp
 
 from repro.models import build
 from repro.models.config import ModelConfig
 
 PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Kernel serving on a learner mesh
+# ---------------------------------------------------------------------------
+
+
+def make_kernel_serving_engine(
+    learner,
+    pcfg,
+    m: int,
+    *,
+    devices: int = 0,
+    **engine_kw,
+):
+    """Build a :class:`repro.serving.KernelServingEngine` with its
+    learner axis sharded over a device mesh.
+
+    ``devices``: how many devices the ``learners`` mesh axis spans
+    (default 0 = all visible; m must divide evenly).  Every other
+    keyword forwards to the engine constructor — protocol, system
+    model, tick cadence, buckets.  With one visible device this
+    degrades gracefully to the unmeshed engine (the mesh exists, the
+    routing is the identity), so the same launch code serves a laptop
+    and a pod.
+    """
+    from repro.launch.mesh import make_learner_mesh
+
+    if "mesh" in engine_kw:
+        raise ValueError(
+            "pass devices=..., not mesh=; make_kernel_serving_engine "
+            "owns the mesh construction")
+    from repro.serving import KernelServingEngine
+
+    mesh = make_learner_mesh(devices)
+    return KernelServingEngine(learner, pcfg, m, mesh=mesh, **engine_kw)
+
+
+# ---------------------------------------------------------------------------
+# LM serving steps (prefill / decode), used by the dry-run
+# ---------------------------------------------------------------------------
 
 
 def make_prefill_step(cfg: ModelConfig):

