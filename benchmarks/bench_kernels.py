@@ -23,21 +23,20 @@ def run(quick: bool = False):
 
     rows = []
     g_ref = jax.jit(lambda X, Y: ref.gram_ref(X, Y, gamma=0.5))
-    us = timeit(lambda: jax.block_until_ready(g_ref(X, Y)))
+    us = timeit(g_ref, X, Y)
     rows.append(Row("kernels/gram_jnp_oracle", us, f"M={M};d={d}"))
-    us = timeit(lambda: jax.block_until_ready(
-        ops.gram(X, Y, gamma=0.5, force_pallas=True)))
+    us = timeit(lambda: ops.gram(X, Y, gamma=0.5, force_pallas=True))
     rows.append(Row("kernels/gram_pallas_interpret", us,
                     "validated=allclose;mode=interpret(CPU)"))
 
     q_ref = jax.jit(lambda X, Y, a, b: ref.quadform_ref(X, Y, a, b, gamma=0.5))
-    us = timeit(lambda: jax.block_until_ready(q_ref(X, Y, a, b)))
+    us = timeit(q_ref, X, Y, a, b)
     hbm_naive = M * M * 4
     hbm_fused = 2 * M * d * 4
     rows.append(Row("kernels/quadform_jnp_oracle", us,
                     f"hbm_gram_bytes={hbm_naive}"))
-    us = timeit(lambda: jax.block_until_ready(
-        ops.quadform(X, Y, a, b, gamma=0.5, force_pallas=True)))
+    us = timeit(lambda: ops.quadform(X, Y, a, b, gamma=0.5,
+                                    force_pallas=True))
     rows.append(Row("kernels/quadform_pallas_interpret", us,
                     f"hbm_stream_bytes={hbm_fused};"
                     f"traffic_saving={hbm_naive / hbm_fused:.0f}x"))
@@ -45,10 +44,9 @@ def run(quick: bool = False):
     W = jnp.asarray(rng.normal(size=(M, d)), jnp.float32)
     bias = jnp.asarray(rng.uniform(size=(M,)) * 6.28, jnp.float32)
     r_ref = jax.jit(lambda X: ref.rff_ref(X, W, bias))
-    us = timeit(lambda: jax.block_until_ready(r_ref(X)))
+    us = timeit(r_ref, X)
     rows.append(Row("kernels/rff_jnp_oracle", us, f"D={M}"))
-    us = timeit(lambda: jax.block_until_ready(
-        ops.rff_features(X, W, bias, force_pallas=True)))
+    us = timeit(lambda: ops.rff_features(X, W, bias, force_pallas=True))
     rows.append(Row("kernels/rff_pallas_interpret", us,
                     "fused=proj+bias+cos"))
     return rows

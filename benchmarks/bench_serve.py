@@ -43,7 +43,7 @@ from repro.data import susy_stream
 from repro.runtime import SystemConfig
 from repro.serving import serve_stream
 
-from .common import Row
+from .common import Row, timeit
 
 T, M, D_IN = 600, 4, 8
 
@@ -96,19 +96,16 @@ def _batched_predict_speedup(X, Y, bucket=32, reps=20):
     lids = jnp.asarray(rng.integers(0, X.shape[1], bucket).astype(np.int32))
     Xb = jnp.asarray(X[:bucket, 0].astype(np.float32))
     predict = jax.jit(sub.predict_batch)
-    predict(models, lids, Xb).block_until_ready()             # warm B
-    predict(models, lids[:1], Xb[:1]).block_until_ready()     # warm 1
+    batched = timeit(predict, models, lids, Xb, iters=reps) / 1e6
 
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        predict(models, lids, Xb).block_until_ready()
-    batched = (time.perf_counter() - t0) / reps
-
-    t0 = time.perf_counter()
-    for _ in range(reps):
+    def solo_pass():
+        # blocking INSIDE the loop is the point here: each request
+        # waits for its own answer, as a real one-at-a-time server would
         for i in range(bucket):
-            predict(models, lids[i:i + 1], Xb[i:i + 1]).block_until_ready()
-    solo = (time.perf_counter() - t0) / reps
+            jax.block_until_ready(predict(models, lids[i:i + 1],
+                                          Xb[i:i + 1]))
+
+    solo = timeit(solo_pass, iters=reps) / 1e6
     return batched, solo, solo / batched
 
 

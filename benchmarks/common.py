@@ -1,9 +1,53 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness (DESIGN.md Sec. 11).
+
+Two jobs:
+
+* ``timeit`` — wall-clock timing that is honest under JAX's async
+  dispatch: the result of every call is ``jax.block_until_ready``-ed
+  inside BOTH the warmup and the timed loop, so a benchmark measures
+  the computation, not the enqueue.  Benchmarks pass plain callables;
+  no caller-side blocking needed.
+
+* ``BenchReport`` — the machine-readable form of a suite's rows.  The
+  human-facing CSV on stdout stays, but ``run.py --json-dir`` also
+  serializes one ``BENCH_<suite>.json`` per suite: an environment /
+  device fingerprint, the raw rows, and the suite's *claims* — every
+  ``key=True|False`` pair found in a row's ``derived`` string, keyed
+  ``<row_name>/<key>``.  ``tools/bench_compare.py`` diffs two report
+  directories against per-metric thresholds so CI can gate on
+  performance and claim regressions.
+"""
 from __future__ import annotations
 
+import dataclasses
+import json
+import os
+import platform
 import time
-from dataclasses import dataclass
-from typing import Callable, List
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List
+
+import jax
+
+SCHEMA_VERSION = 1
+
+# required keys (and value types) of a serialized report / row — kept
+# as data so validate_report needs no third-party schema library
+_REPORT_FIELDS = {
+    "schema_version": int,
+    "suite": str,
+    "wall_seconds": (int, float),
+    "env": dict,
+    "rows": list,
+    "claims": dict,
+}
+_ROW_FIELDS = {
+    "name": str,
+    "us_per_call": (int, float),
+    "derived": str,
+}
+_ENV_FIELDS = ("python", "jax", "backend", "device_kind", "device_count",
+               "platform")
 
 
 @dataclass
@@ -15,14 +59,130 @@ class Row:
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
 
+    def derived_fields(self) -> Dict[str, str]:
+        """The ``k=v`` pairs of ``derived`` (``;``-separated)."""
+        out: Dict[str, str] = {}
+        for part in self.derived.split(";"):
+            if "=" in part:
+                k, _, v = part.partition("=")
+                out[k.strip()] = v.strip()
+        return out
+
+    def claims(self) -> Dict[str, bool]:
+        """Boolean-valued derived fields — the row's gated claims."""
+        return {k: v == "True" for k, v in self.derived_fields().items()
+                if v in ("True", "False")}
+
 
 def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Mean microseconds per call, blocking on each call's result.
+
+    Blocking inside the timed loop (not just at the end) is what makes
+    the number a latency rather than a dispatch rate; blocking in
+    warmup keeps compilation out of the timed region.
+    """
     for _ in range(warmup):
-        fn(*args)
+        jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
-        fn(*args)
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def env_fingerprint() -> Dict[str, Any]:
+    """Where these numbers came from — attached to every report."""
+    devices = jax.devices()
+    return {
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": devices[0].device_kind if devices else "none",
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+    }
+
+
+@dataclass
+class BenchReport:
+    """One suite's run, ready for serialization and later comparison."""
+
+    suite: str
+    rows: List[Row]
+    wall_seconds: float = 0.0
+    env: Dict[str, Any] = field(default_factory=env_fingerprint)
+    schema_version: int = SCHEMA_VERSION
+
+    def claims(self) -> Dict[str, bool]:
+        out: Dict[str, bool] = {}
+        for r in self.rows:
+            for k, v in r.claims().items():
+                out[f"{r.name}/{k}"] = v
+        return out
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "schema_version": self.schema_version,
+            "suite": self.suite,
+            "wall_seconds": self.wall_seconds,
+            "env": self.env,
+            "rows": [dataclasses.asdict(r) for r in self.rows],
+            "claims": self.claims(),
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True, indent=1)
+
+    def save(self, out_dir: str) -> str:
+        """Write ``BENCH_<suite>.json`` under out_dir; returns the path."""
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"BENCH_{self.suite}.json")
+        with open(path, "w") as fh:
+            fh.write(self.to_json() + "\n")
+        return path
+
+
+def validate_report(doc: Any) -> List[str]:
+    """Schema problems of a deserialized report; empty means valid."""
+    problems: List[str] = []
+    if not isinstance(doc, dict):
+        return [f"report is {type(doc).__name__}, expected object"]
+    for key, typ in _REPORT_FIELDS.items():
+        if key not in doc:
+            problems.append(f"missing key {key!r}")
+        elif not isinstance(doc[key], typ) or isinstance(doc[key], bool):
+            problems.append(f"{key!r} has type {type(doc[key]).__name__}")
+    if problems:
+        return problems
+    if doc["schema_version"] != SCHEMA_VERSION:
+        problems.append(f"schema_version {doc['schema_version']} != "
+                        f"{SCHEMA_VERSION}")
+    for key in _ENV_FIELDS:
+        if key not in doc["env"]:
+            problems.append(f"env missing {key!r}")
+    for i, row in enumerate(doc["rows"]):
+        if not isinstance(row, dict):
+            problems.append(f"rows[{i}] is not an object")
+            continue
+        for key, typ in _ROW_FIELDS.items():
+            if key not in row:
+                problems.append(f"rows[{i}] missing {key!r}")
+            elif not isinstance(row[key], typ) or isinstance(row[key], bool):
+                problems.append(f"rows[{i}].{key} has type "
+                                f"{type(row[key]).__name__}")
+    for k, v in doc["claims"].items():
+        if not isinstance(v, bool):
+            problems.append(f"claim {k!r} is not a bool")
+    return problems
+
+
+def load_report(path: str) -> Dict[str, Any]:
+    """Load and validate one BENCH_*.json; raises ValueError if invalid."""
+    with open(path) as fh:
+        doc = json.load(fh)
+    problems = validate_report(doc)
+    if problems:
+        raise ValueError(f"{path}: " + "; ".join(problems))
+    return doc
 
 
 def print_rows(rows: List[Row]) -> None:

@@ -1,8 +1,12 @@
 """Benchmark harness: one module per paper table/figure.
 
-  python -m benchmarks.run [--quick] [--only NAME]
+  python -m benchmarks.run [--quick] [--only NAME] [--json-dir DIR]
 
-Output: ``name,us_per_call,derived`` CSV rows (plus a summary).
+Output: ``name,us_per_call,derived`` CSV rows (plus a summary).  With
+``--json-dir`` each suite additionally writes a machine-readable
+``BENCH_<suite>.json`` report (env fingerprint, rows, gated claims —
+see ``common.BenchReport``) that ``tools/bench_compare.py`` can diff
+against a baseline directory.
 """
 from __future__ import annotations
 
@@ -15,7 +19,7 @@ from . import (bench_adaptive, bench_async, bench_bounds, bench_comm_time,
                bench_compression, bench_engine, bench_kernels,
                bench_lm_protocol, bench_rff, bench_roofline, bench_serve,
                bench_stock, bench_tradeoff)
-from .common import print_rows
+from .common import BenchReport, print_rows
 
 SUITES = {
     "tradeoff": bench_tradeoff,        # Fig. 1(a)
@@ -39,6 +43,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes for CI")
     ap.add_argument("--only", default=None, choices=list(SUITES))
+    ap.add_argument("--json-dir", default=None, metavar="DIR",
+                    help="also write BENCH_<suite>.json reports here")
     args = ap.parse_args()
 
     names = [args.only] if args.only else list(SUITES)
@@ -48,8 +54,13 @@ def main() -> None:
         try:
             rows = SUITES[name].run(quick=args.quick)
             all_rows.extend(rows)
-            print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+            wall = time.time() - t0
+            print(f"# {name}: {len(rows)} rows in {wall:.1f}s",
                   file=sys.stderr)
+            if args.json_dir:
+                path = BenchReport(name, rows, wall_seconds=wall).save(
+                    args.json_dir)
+                print(f"# {name}: wrote {path}", file=sys.stderr)
         except Exception:
             traceback.print_exc()
             failures.append(name)

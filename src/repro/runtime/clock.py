@@ -38,13 +38,23 @@ class Event:
 
 
 class Clock:
-    """Global event queue.  ``schedule`` is the only way time advances."""
+    """Global event queue.  ``schedule`` is the only way time advances.
 
-    def __init__(self) -> None:
+    ``tracer`` (a ``telemetry.trace.Tracer``, optional) samples the
+    queue as events process: a ``clock/queue`` counter track of
+    pending events on the simulated timeline (DESIGN.md Sec. 11).
+    Everything else traced in a run — message spans, round slices,
+    sync episodes — is recorded by the component that owns it
+    (transport / nodes / serving), all against this clock's ``now``,
+    which is what makes the export deterministic under seed.
+    """
+
+    def __init__(self, tracer=None) -> None:
         self.now: float = 0.0
         self._seq: int = 0
         self._heap: List[Event] = []
         self.events_processed: int = 0
+        self.tracer = tracer
 
     def schedule(self, delay: float, fn: Callable[[], None]) -> None:
         if delay < 0:
@@ -62,6 +72,9 @@ class Clock:
             ev.fn()
             self.events_processed += 1
             n += 1
+            if self.tracer is not None:
+                self.tracer.counter("clock/queue", self.now,
+                                    {"pending": len(self._heap)})
             if max_events is not None and n >= max_events:
                 return
 

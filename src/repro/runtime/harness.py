@@ -66,6 +66,7 @@ def run_async_simulation(
     record_divergence: bool = True,
     barrier_num_syncs: Optional[int] = None,
     backend: Optional[str] = None,           # None -> substrate's own
+    tracer=None,                             # telemetry.Tracer, optional
 ) -> AsyncSimResult:
     """Run T rounds of m learners under the asynchronous protocol.
 
@@ -83,6 +84,12 @@ def run_async_simulation(
     trips.  Async windowing can fragment aggregations, so for a fair
     baseline pass the SERIAL simulator's sync count on the same
     workload (bench_async does); defaults to this run's own count.
+
+    tracer: a ``repro.telemetry.Tracer`` records the run's full event
+    trace on the simulated clock — learner round slices, message spans
+    with their Sec. 3 byte annotations, aggregation windows and
+    dynamic sync episodes — Perfetto-loadable via ``tracer.save`` and
+    byte-identical under seed (DESIGN.md Sec. 11).
     """
     sub = substrate_of(learner, sync_budget=sync_budget,
                        compress_method=compress_method, backend=backend)
@@ -92,7 +99,7 @@ def run_async_simulation(
     model = SystemModel(sys_cfg, m)
     compute_times = model.draw_compute(T)
 
-    clock = Clock()
+    clock = Clock(tracer=tracer)
     network = Network(clock, model)
     bm = accounting.ByteModel(dim=d)
 

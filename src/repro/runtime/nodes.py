@@ -40,6 +40,7 @@ import numpy as np
 
 from ..core.accounting import ByteModel
 from ..core.substrate import Substrate, node_ops
+from ..telemetry.trace import PID_RUNTIME
 from .async_protocol import AsyncProtocolConfig, staleness_weight
 from .clock import Clock
 from .transport import Message, Network
@@ -113,6 +114,16 @@ class LearnerNode:
         self.t = t + 1
         if self.snapshot is not None:
             self.snapshot(t, self.idx, self._model())
+
+        tracer = self.network.tracer
+        if tracer is not None:
+            # the round slice ends NOW (this event fired at completion)
+            # and lasted this round's drawn compute time
+            ct = float(self.compute_times[t])
+            tracer.complete(
+                "round", self.clock.now - ct, ct, pid=PID_RUNTIME,
+                tid=tracer.tid(PID_RUNTIME, self.name),
+                args={"t": t, "loss": self.loss_out[t, self.idx]})
 
         self._maybe_communicate(t)
 
@@ -197,6 +208,8 @@ class CoordinatorNode:
         self.eps_history: List[float] = []
         self.sync_log: List[Dict[str, Any]] = []
         self.staleness_seen: List[int] = []
+        self._episode_start = 0.0    # trace: episode-open time
+        self._window_start = 0.0     # trace: aggregation-window open time
         # generous default: a lost pull/upload must not wedge the
         # protocol; after the timeout new reports may re-trigger pulls.
         if episode_timeout is None:
@@ -218,6 +231,7 @@ class CoordinatorNode:
             return                      # a sync is already in flight
         self.episode_open = True
         self.episode_ctr += 1
+        self._episode_start = self.clock.now
         episode = self.episode_ctr
         for i in range(self.m):
             self.network.send(COORD, f"learner{i}", "pull",
@@ -238,6 +252,7 @@ class CoordinatorNode:
         self.window[msg.payload["learner"]] = msg.payload
         if not self.window_open:
             self.window_open = True
+            self._window_start = self.clock.now
             self.clock.schedule(self.acfg.agg_window, self._close_window)
 
     def _close_window(self) -> None:
@@ -247,7 +262,9 @@ class CoordinatorNode:
         # Only the window that merged the CURRENT episode's uploads
         # resolves it — a straggler window replaying an old episode
         # must not clear the flag of a sync still in flight.
-        if any(e.get("episode") == self.episode_ctr for e in entries):
+        resolved_episode = any(
+            e.get("episode") == self.episode_ctr for e in entries)
+        if resolved_episode:
             self.episode_open = False
         if not entries:
             return
@@ -277,3 +294,20 @@ class CoordinatorNode:
             "version": self.version,
             "max_lag": max(lags),
         })
+
+        tracer = self.network.tracer
+        if tracer is not None:
+            tid = tracer.tid(PID_RUNTIME, COORD)
+            args = {"round": trigger_round, "n_models": len(entries),
+                    "version": self.version, "max_lag": max(lags)}
+            # the aggregation window that just closed ...
+            tracer.complete("sync/window", self._window_start,
+                            self.clock.now - self._window_start,
+                            pid=PID_RUNTIME, tid=tid, args=args)
+            # ... and, when it resolved a dynamic episode, the whole
+            # report -> pulls -> uploads -> aggregate span
+            if resolved_episode:
+                tracer.complete("sync/episode", self._episode_start,
+                                self.clock.now - self._episode_start,
+                                pid=PID_RUNTIME, tid=tid,
+                                args=dict(args, episode=self.episode_ctr))

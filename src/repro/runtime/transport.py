@@ -19,7 +19,7 @@ cumulative latency per directed link.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 # Payload sizing (the Sec. 3 delta encoding per link) lives with the
 # rest of the byte accounting in core.accounting; the substrate layer
@@ -27,6 +27,7 @@ from typing import Any, Callable, Dict, Tuple
 # each upload/download.  Re-exported here for the transport's users.
 from ..core.accounting import (ByteModel, idset, kernel_payload_bytes,
                                linear_payload_bytes)
+from ..telemetry.trace import PID_NETWORK, Tracer
 from .clock import Clock, SystemModel
 
 
@@ -66,9 +67,12 @@ class LinkStats:
 class Network:
     """Event-driven message fabric between named nodes."""
 
-    def __init__(self, clock: Clock, model: SystemModel):
+    def __init__(self, clock: Clock, model: SystemModel,
+                 tracer: Optional[Tracer] = None):
         self.clock = clock
         self.model = model
+        # default to the clock's tracer so one handle threads the run
+        self.tracer = tracer if tracer is not None else clock.tracer
         self._nodes: Dict[str, Callable[[Message], None]] = {}
         self.links: Dict[Tuple[str, str], LinkStats] = {}
         self.total_bytes = 0
@@ -98,10 +102,26 @@ class Network:
         if self.model.drop():
             stats.dropped += 1
             self.dropped += 1
+            if self.tracer is not None:
+                self.tracer.instant(
+                    f"drop/{kind}", self.clock.now, pid=PID_NETWORK,
+                    tid=self.tracer.tid(PID_NETWORK, f"{src}->{dst}"),
+                    args={"src": src, "dst": dst, "nbytes": nbytes,
+                          "round": round})
             return msg
         latency = self.model.draw_latency(nbytes)
         stats.total_latency += latency
         msg.deliver_time = self.clock.now + latency
+        if self.tracer is not None:
+            # one span per message, send -> deliver, carrying the
+            # Sec. 3 byte annotation (DESIGN.md Sec. 11): the nbytes
+            # args summed over msg/* spans plus drop/* instants ARE
+            # the run's total_bytes (bytes leave the sender either way)
+            self.tracer.complete(
+                f"msg/{kind}", msg.send_time, latency, pid=PID_NETWORK,
+                tid=self.tracer.tid(PID_NETWORK, f"{src}->{dst}"),
+                args={"src": src, "dst": dst, "nbytes": nbytes,
+                      "round": round})
         self.clock.schedule(latency, lambda: self._deliver(msg))
         return msg
 

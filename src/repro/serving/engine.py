@@ -70,6 +70,7 @@ from ..core.protocol import ProtocolConfig
 from ..core.simulation import SimResult
 from ..core.substrate import Substrate
 from ..runtime.clock import Clock, SystemConfig, SystemModel
+from ..telemetry.trace import PID_SERVING, Tracer
 
 Array = jnp.ndarray
 
@@ -203,6 +204,14 @@ class KernelServingEngine:
     (``substrate_of``): ``sync_budget`` / ``compress_method`` /
     ``backend`` are ``None`` sentinels meaning "keep the substrate's
     own configuration".
+
+    ``tracer`` (a ``repro.telemetry.Tracer``, DESIGN.md Sec. 11)
+    records the request lifecycle on the engine's simulated clock:
+    an ``enqueue`` instant at arrival, a ``request`` span
+    arrival -> reply, per-batch ``predict/bucket<B>`` spans, queue-depth
+    and bucket-occupancy counter tracks, per-round protocol instants
+    and ``sync/transfer`` spans carrying their Sec. 3 bytes.  No
+    tracer, no cost — and never any change to the jitted step.
     """
 
     def __init__(
@@ -221,6 +230,7 @@ class KernelServingEngine:
         predict_cost: float = 0.0,
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         record_divergence: bool = False,
+        tracer: Optional[Tracer] = None,
     ):
         if m < 1:
             raise ValueError(f"need at least one learner, got m={m}")
@@ -265,8 +275,11 @@ class KernelServingEngine:
             self._per_shard = None
             self._model_sharding = None
 
-        # the seeded timeline (shared clock model with repro.runtime)
-        self.clock = Clock()
+        # the seeded timeline (shared clock model with repro.runtime);
+        # the tracer rides on it so every span below is simulated time
+        # (telemetry/trace.py: byte-identical export under seed)
+        self.tracer = tracer
+        self.clock = Clock(tracer=tracer)
         self.system = SystemModel(sys_cfg or SystemConfig(), self.m)
 
         self._uid = itertools.count()
@@ -344,6 +357,11 @@ class KernelServingEngine:
 
     def _arrive_predict(self, req: PredictRequest) -> None:
         self._pending.append(req)
+        if self.tracer is not None:
+            self.tracer.instant(
+                "enqueue", self.clock.now, pid=PID_SERVING,
+                tid=self.tracer.tid(PID_SERVING, "requests"),
+                args={"uid": req.uid, "learner": req.learner})
         self._ensure_tick()
 
     def _arrive_feedback(self, learner: int,
@@ -392,6 +410,12 @@ class KernelServingEngine:
         self._tick_scheduled = False
         self._ticks += 1
         self._queue_depth.append(len(self._pending))
+        tracer = self.tracer
+        if tracer is not None:
+            # queue-depth counter track, sampled at every tick start
+            tracer.counter("serve/queue_depth", self.clock.now,
+                           {"pending": len(self._pending)},
+                           pid=PID_SERVING)
         cursor = max(self.clock.now, self._busy_until)
 
         if self._pending:
@@ -410,12 +434,35 @@ class KernelServingEngine:
                         Xb[i] = r.x
                     yh = np.asarray(self._predict(
                         models, jnp.asarray(lids), jnp.asarray(Xb)))
+                    batch_start = cursor
                     cursor += self.predict_cost
                     self._bucket_counts[bucket] += 1
                     for i, r in enumerate(chunk):
                         r.yhat = float(yh[i])
                         r.done_time = cursor
                     self._served.extend(chunk)
+                    if tracer is not None:
+                        tid = tracer.tid(PID_SERVING, "predict")
+                        tracer.complete(
+                            f"predict/bucket{bucket}", batch_start,
+                            self.predict_cost, pid=PID_SERVING, tid=tid,
+                            args={"bucket": bucket, "filled": len(chunk),
+                                  "shard": self.home_shard(
+                                      chunk[0].learner)})
+                        tracer.counter(
+                            "serve/bucket_occupancy", batch_start,
+                            {"filled": len(chunk), "bucket": bucket},
+                            pid=PID_SERVING)
+                        # request lifecycle: enqueue instant at arrival
+                        # (recorded then) -> this span closes the loop
+                        rtid = tracer.tid(PID_SERVING, "requests")
+                        for r in chunk:
+                            tracer.complete(
+                                "request", r.arrival,
+                                r.done_time - r.arrival,
+                                pid=PID_SERVING, tid=rtid,
+                                args={"uid": r.uid, "learner": r.learner,
+                                      "bucket": bucket})
             self._pending.clear()
             self._busy_until = cursor
             if cursor > self.clock.now:
@@ -448,6 +495,12 @@ class KernelServingEngine:
         fired = bool(flag)
         self._flag_rows.append(fired)
         self._t += 1
+        if self.tracer is not None:
+            self.tracer.instant(
+                "round", self.clock.now, pid=PID_SERVING,
+                tid=self.tracer.tid(PID_SERVING, "protocol"),
+                args={"t": self._t - 1, "nbytes": int(nbytes),
+                      "sync": fired})
         if fired:
             # background sync: price the Sec. 3 bytes into simulated
             # network time (same seeded draw order as the runtime's
@@ -455,6 +508,13 @@ class KernelServingEngine:
             # never blocks the tick loop, but wall_clock sees it.
             delay = self.system.draw_latency(int(nbytes))
             self._sync_delays.append(delay)
+            if self.tracer is not None:
+                # the sync transfer span, carrying its Sec. 3 bytes
+                self.tracer.complete(
+                    "sync/transfer", self.clock.now, delay,
+                    pid=PID_SERVING,
+                    tid=self.tracer.tid(PID_SERVING, "protocol"),
+                    args={"t": self._t - 1, "nbytes": int(nbytes)})
             if delay > 0:
                 self.clock.schedule(delay, lambda: None)
 

@@ -1,0 +1,30 @@
+"""Observability subsystem (DESIGN.md Sec. 11).
+
+- trace:   structured span/counter/instant recorder exporting
+           Chrome-trace-event JSON (Perfetto-viewable) on the
+           *simulated* event clock — byte-identical under seed.
+- monitor: the paper's loss-proportionality criterion as a live
+           per-round check (CriterionMonitor), integer-exact against
+           the Sec. 3 DeviceLedger for every driver and substrate.
+- probe:   backend-compile counters on jit cache misses
+           (CompileCounter) and wall-clock timers that always
+           ``block_until_ready`` (time_fn / wallclock).
+
+Everything here is host-side and opt-in: no tracer, no cost — the
+jitted scan core is never touched (no traced values enter the carry).
+"""
+from . import monitor, probe, trace
+from .monitor import (CriterionMonitor, MonitorSeries, monitor_result,
+                      monitor_sweep, unit_bytes_of)
+from .probe import CompileCounter, TimedStats, time_fn, wallclock
+from .trace import (PID_MONITOR, PID_NETWORK, PID_RUNTIME, PID_SERVING,
+                    TICKS_PER_UNIT, Tracer)
+
+__all__ = [
+    "monitor", "probe", "trace",
+    "CriterionMonitor", "MonitorSeries", "monitor_result",
+    "monitor_sweep", "unit_bytes_of",
+    "CompileCounter", "TimedStats", "time_fn", "wallclock",
+    "PID_MONITOR", "PID_NETWORK", "PID_RUNTIME", "PID_SERVING",
+    "TICKS_PER_UNIT", "Tracer",
+]

@@ -1,0 +1,172 @@
+"""Compile counters and honest wall-clock probes (DESIGN.md Sec. 11).
+
+Two measurement hazards this module exists to close:
+
+- **Phantom speed.** JAX dispatch is asynchronous: timing ``fn(x)``
+  without blocking measures how fast Python can *enqueue* work, not
+  how fast the device computes it.  Every timing path here calls
+  ``jax.block_until_ready`` on the produced values inside both the
+  warmup and the timed region (``benchmarks/common.timeit`` delegates
+  to the same discipline).
+
+- **Silent recompiles.** The repo's compile-cache contracts (frozen
+  hashable substrates keying ``engine._jitted``, one executable per
+  (substrate, kind) sweep group — DESIGN.md Secs. 7-8) are easy to
+  break invisibly: a recompile costs seconds and shows up in no test.
+  :class:`CompileCounter` counts backend compiles via
+  ``jax.monitoring``'s ``/jax/core/compile/backend_compile_duration``
+  event — fired exactly once per XLA compilation, cache hits fire
+  nothing — making "this call must not compile anything new" an
+  assertable property (tests/test_telemetry.py pins the engine's
+  cache-keying contract with it).
+
+The jax.monitoring API registers listeners for the life of the
+process; this module installs ONE module-level listener lazily and
+dispatches to whatever counters are currently active, so counters nest
+and never leak.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional
+
+import jax
+
+#: The monitoring event jax fires once per actual XLA backend compile.
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_active_counters: List["CompileCounter"] = []
+_listener_installed = False
+
+
+def _on_event_duration(event: str, duration_secs: float, **_kw) -> None:
+    if event != _COMPILE_EVENT:
+        return
+    for c in _active_counters:
+        c.compiles += 1
+        c.compile_secs += duration_secs
+
+
+def _install_listener() -> None:
+    global _listener_installed
+    if not _listener_installed:
+        jax.monitoring.register_event_duration_secs_listener(
+            _on_event_duration)
+        _listener_installed = True
+
+
+class CompileCounter:
+    """Context manager counting XLA backend compiles in its scope.
+
+    ::
+
+        with CompileCounter() as c:
+            engine.run(cfg, pcfg, X, Y)      # may compile
+            n = c.compiles
+            engine.run(cfg, pcfg, X, Y)      # cache hit
+        assert c.compiles == n               # no recompile
+
+    ``compiles`` counts every executable XLA built — the jitted scan
+    plus any small eager ops not yet in the process-wide cache — so
+    regression tests assert *deltas* ("the second call adds zero"),
+    which is exactly the cache-contract shape.  Counters may nest;
+    each sees all compiles while it is active.
+    """
+
+    def __init__(self) -> None:
+        self.compiles = 0
+        self.compile_secs = 0.0
+
+    def __enter__(self) -> "CompileCounter":
+        _install_listener()
+        _active_counters.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _active_counters.remove(self)
+
+
+@dataclasses.dataclass
+class TimedStats:
+    """What :func:`time_fn` measured."""
+
+    us_per_call: float       # mean wall time per timed call, blocked
+    iters: int
+    compiles: int            # backend compiles during the TIMED loop
+    warmup_compiles: int     # backend compiles during warmup
+    compile_secs: float      # seconds spent compiling during warmup
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            ) -> TimedStats:
+    """Time ``fn(*args)``, blocking on its outputs every iteration.
+
+    Warmup runs absorb compilation (and report it:
+    ``warmup_compiles`` / ``compile_secs``); the timed loop then
+    measures steady state — if anything compiles *inside* the timed
+    loop, ``compiles`` is nonzero and the number is not a steady-state
+    number, which callers can assert against.
+    """
+    with CompileCounter() as cw:
+        for _ in range(max(warmup, 0)):
+            jax.block_until_ready(fn(*args))
+    with CompileCounter() as ct:
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn(*args))
+        wall = time.perf_counter() - t0
+    return TimedStats(
+        us_per_call=wall / iters * 1e6,
+        iters=iters,
+        compiles=ct.compiles,
+        warmup_compiles=cw.compiles,
+        compile_secs=cw.compile_secs,
+    )
+
+
+class Wallclock:
+    """Handle yielded by :func:`wallclock`; ``track`` registers device
+    values the elapsed time must wait for."""
+
+    def __init__(self) -> None:
+        self.seconds: float = 0.0
+        self.compiles: int = 0
+        self._tracked: List[Any] = []
+
+    def track(self, value):
+        """Register a (pytree of) device value(s); returns it."""
+        self._tracked.append(value)
+        return value
+
+
+class wallclock:
+    """Timing context that always blocks on tracked device values::
+
+        with wallclock() as w:
+            out = w.track(jitted_step(carry, xs))
+        w.seconds, w.compiles
+
+    On exit the context blocks on everything ``track``ed (async
+    dispatch cannot leak out of the measurement) and records backend
+    compiles observed inside the region.
+    """
+
+    def __init__(self) -> None:
+        self._w = Wallclock()
+        self._counter = CompileCounter()
+
+    def __enter__(self) -> Wallclock:
+        self._counter.__enter__()
+        self._t0 = time.perf_counter()
+        return self._w
+
+    def __exit__(self, *exc) -> Optional[bool]:
+        try:
+            if exc == (None, None, None):
+                jax.block_until_ready(self._w._tracked)
+        finally:
+            self._w.seconds = time.perf_counter() - self._t0
+            self._counter.__exit__(*exc)
+            self._w.compiles = self._counter.compiles
+        return None

@@ -1,0 +1,130 @@
+"""Diff two benchmark-report directories; nonzero exit on regression.
+
+  python tools/bench_compare.py BASELINE_DIR CANDIDATE_DIR \
+      [--threshold 1.5] [--threshold-for 'engine/*=2.0' ...] \
+      [--min-us 100]
+
+Both directories hold ``BENCH_<suite>.json`` files written by
+``python -m benchmarks.run --json-dir DIR`` (schema:
+``benchmarks/common.py``).  Three regression classes:
+
+* timing — a row's candidate ``us_per_call`` exceeds baseline by more
+  than the threshold ratio.  The default ratio applies everywhere;
+  ``--threshold-for PATTERN=RATIO`` (fnmatch on the row name, first
+  match wins, repeatable) overrides it per metric.  Rows whose
+  baseline is below ``--min-us`` are too noisy to gate and are skipped.
+* claims — a claim that was True in the baseline is False in the
+  candidate (``serving_losses_identical=True`` -> ``=False``).
+* coverage — a suite or row present in the baseline is missing from
+  the candidate.
+
+Self-diff of a directory against itself is a no-op and exits 0 — CI
+runs exactly that as a sanity check of the comparator itself.
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import glob
+import os
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# run.py imports benchmarks.common via the package; this tool must work
+# standalone (`python tools/bench_compare.py`), so resolve the repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import load_report  # noqa: E402
+
+
+def load_dir(path: str) -> Dict[str, dict]:
+    """suite -> validated report for every BENCH_*.json under path."""
+    reports = {}
+    for fname in sorted(glob.glob(os.path.join(path, "BENCH_*.json"))):
+        doc = load_report(fname)
+        reports[doc["suite"]] = doc
+    if not reports:
+        raise ValueError(f"no BENCH_*.json files in {path!r}")
+    return reports
+
+
+def threshold_for(name: str, default: float,
+                  overrides: Sequence[Tuple[str, float]]) -> float:
+    for pattern, ratio in overrides:
+        if fnmatch.fnmatch(name, pattern):
+            return ratio
+    return default
+
+
+def compare(baseline: Dict[str, dict], candidate: Dict[str, dict],
+            threshold: float = 1.5,
+            overrides: Sequence[Tuple[str, float]] = (),
+            min_us: float = 100.0) -> List[str]:
+    """Regression messages; empty means the candidate passes."""
+    regressions: List[str] = []
+    for suite, base in sorted(baseline.items()):
+        cand = candidate.get(suite)
+        if cand is None:
+            regressions.append(f"[coverage] suite {suite!r} missing "
+                               "from candidate")
+            continue
+        cand_rows = {r["name"]: r for r in cand["rows"]}
+        for row in base["rows"]:
+            name = row["name"]
+            other = cand_rows.get(name)
+            if other is None:
+                regressions.append(f"[coverage] row {name!r} missing "
+                                   "from candidate")
+                continue
+            if row["us_per_call"] < min_us:
+                continue
+            limit = threshold_for(name, threshold, overrides)
+            ratio = other["us_per_call"] / row["us_per_call"]
+            if ratio > limit:
+                regressions.append(
+                    f"[timing] {name}: {row['us_per_call']:.1f}us -> "
+                    f"{other['us_per_call']:.1f}us "
+                    f"({ratio:.2f}x > {limit:.2f}x)")
+        for claim, held in sorted(base["claims"].items()):
+            if held and candidate[suite]["claims"].get(claim) is False:
+                regressions.append(f"[claim] {claim}: True -> False")
+    return regressions
+
+
+def _parse_override(spec: str) -> Tuple[str, float]:
+    pattern, sep, ratio = spec.rpartition("=")
+    if not sep:
+        raise argparse.ArgumentTypeError(
+            f"expected PATTERN=RATIO, got {spec!r}")
+    return pattern, float(ratio)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="directory of baseline BENCH_*.json")
+    ap.add_argument("candidate", help="directory of candidate BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="default allowed us_per_call ratio (default 1.5)")
+    ap.add_argument("--threshold-for", type=_parse_override, action="append",
+                    default=[], metavar="PATTERN=RATIO",
+                    help="per-metric override, fnmatch on row name; "
+                    "first match wins (repeatable)")
+    ap.add_argument("--min-us", type=float, default=100.0,
+                    help="skip timing gates on rows whose baseline is "
+                    "below this (default 100)")
+    args = ap.parse_args(argv)
+
+    baseline = load_dir(args.baseline)
+    candidate = load_dir(args.candidate)
+    regressions = compare(baseline, candidate, threshold=args.threshold,
+                          overrides=args.threshold_for, min_us=args.min_us)
+    n_rows = sum(len(r["rows"]) for r in baseline.values())
+    print(f"compared {len(baseline)} suites / {n_rows} rows: "
+          f"{len(regressions)} regressions")
+    for msg in regressions:
+        print(msg)
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,6 +31,12 @@ DESIGN_SEC_RANGE_RE = re.compile(
     r"DESIGN\.md\s+Secs?\.?\s*(\d+)\s*[–—-]\s*(\d+)")
 EXPERIMENTS_ANCHOR_RE = re.compile(r"EXPERIMENTS\.md\s+(?:§|Sec\.\s*)(\w+)")
 MD_MENTION_RE = re.compile(r"\b([A-Z][A-Z_]+\.md)\b")
+# Repo paths named in the durable root docs (README map rows, DESIGN
+# module headings, ...) must exist: a rename that forgets the docs
+# should fail CI, not linger as a stale pointer.  Matches .py files
+# and directories under the scanned trees.
+PATH_MENTION_RE = re.compile(
+    r"\b((?:src|tools|benchmarks|tests|examples)/[\w./-]*(?:\.py|/))")
 
 
 def scan_files():
@@ -83,6 +89,14 @@ def main() -> int:
             n_refs += 1
             if not (ROOT / name).exists():
                 errors.append(f"{rel}: {name} does not exist")
+        # CHANGES.md is a historical log: entries may name files that
+        # later PRs legitimately removed, so only the living docs are
+        # held to path existence.
+        if path.suffix == ".md" and path.name != "CHANGES.md":
+            for m in PATH_MENTION_RE.finditer(text):
+                n_refs += 1
+                if not (ROOT / m.group(1)).exists():
+                    errors.append(f"{rel}: path {m.group(1)} does not exist")
 
     for line in errors:
         print(f"DANGLING: {line}", file=sys.stderr)
