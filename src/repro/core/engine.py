@@ -189,9 +189,15 @@ def _make_step(sub: Substrate, kind: str, record_divergence: bool,
         state, reference, ledger = carry
         x, y, t = xs
 
-        yhat = sub.predict(sub.models_of(state), x)
+        if sub.fused_scan_round:
+            # one fused round: predict + update share their featurize/
+            # Gram work (and under an engaged pallas backend run as a
+            # single kernel launch) — core/substrate.py round_stacked
+            state, losses, yhat = sub.round_stacked(state, (x, y))
+        else:
+            yhat = sub.predict(sub.models_of(state), x)
+            state, losses = sub.update(state, (x, y))
         err = _err_terms(sub.loss, yhat, y)         # per-learner
-        state, losses = sub.update(state, (x, y))   # per-learner
         models = sub.models_of(state)
 
         if kind == "none":

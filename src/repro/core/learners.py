@@ -163,8 +163,25 @@ def kernel_update(
     cfg: LearnerConfig, state: KernelLearnerState, example: Tuple[Array, Array]
 ) -> Tuple[KernelLearnerState, Array]:
     x, y = example
+    yhat = predict(cfg.kernel, state.model, x[None])[0]
+    return kernel_update_from_yhat(cfg, state, example, yhat)
+
+
+def kernel_update_from_yhat(
+    cfg: LearnerConfig,
+    state: KernelLearnerState,
+    example: Tuple[Array, Array],
+    yhat: Array,
+) -> Tuple[KernelLearnerState, Array]:
+    """``kernel_update`` with the prediction supplied by the caller.
+
+    The fused scan round (core/substrate.py) computes yhat once per
+    round and feeds it both to the loss record and here, halving the
+    Gram work per round; passing exactly ``predict(...)``'s value makes
+    this bit-identical to ``kernel_update``.
+    """
+    x, y = example
     f = state.model
-    yhat = predict(cfg.kernel, f, x[None])[0]
     ell, g = _loss_and_grad(cfg.loss, yhat, y)
 
     kxx = {

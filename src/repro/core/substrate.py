@@ -24,11 +24,16 @@ directly.
 
 Backend dispatch: ``backend="reference"`` evaluates kernel algebra with
 the pure-jnp definitions in core/rkhs.py and core/rff.py (the semantic
-oracles); ``backend="pallas"`` routes ``predict`` / ``dist_to_ref`` /
-``divergence`` through the fused TPU kernels ``kernels.ops.gram`` /
-``quadform`` / ``rff_features`` (interpret mode validates them on CPU;
-tiny shapes fall back to the reference automatically — see
-kernels/ops.py).
+oracles); ``backend="pallas"`` routes ``predict`` / ``predict_batch`` /
+``dist_to_ref`` / ``divergence`` and the fused scan round through the
+fused TPU kernels ``kernels.ops.sv_predict`` / ``fused_primal_step`` /
+``quadform`` / ``rff_features`` (interpret mode validates them on
+CPU).  The dispatch is *engage-aware* (``kernels.ops.engages``): below
+the Pallas launch threshold the pallas backend runs the exact
+reference expressions, so small-model pallas runs are bit-identical to
+``backend="reference"`` — which is what makes the Def. 1 byte ledger
+backend-independent by construction (tools/substrate_matrix.py pins
+it across the full substrate x protocol x driver matrix).
 
 Two faces, one contract
 -----------------------
@@ -138,6 +143,21 @@ class Substrate:
 
     def update(self, state, example):
         raise NotImplementedError
+
+    # A substrate whose stacked predict and update share expensive work
+    # (the RFF feature map, the SV Gram rows) can set fused_scan_round
+    # and override round_stacked as ONE fused computation; the scan
+    # engine (core/engine.py) then replaces its separate predict +
+    # update calls with it.  The default composition is the engine's
+    # legacy order, so overriding is purely an optimization — the
+    # returned floats must not change (tests/test_backend_parity.py).
+    fused_scan_round: bool = False
+
+    def round_stacked(self, state, example):
+        """One stacked round -> (new_state, losses, yhat_pre_update)."""
+        yhat = self.predict(self.models_of(state), example[0])
+        new_state, losses = self.update(state, example)
+        return new_state, losses, yhat
 
     def average_stacked(self, models):
         """(f_sync, eps): the Prop. 2 average prepared for
@@ -327,12 +347,49 @@ class SVSubstrate(Substrate):
     def with_models(self, state, models):
         return state._replace(model=models)
 
+    def _engaged(self) -> bool:
+        """Pallas backend AND the SV budget reaches the launch
+        threshold.  Below it the reference expressions run verbatim —
+        bit-identical to backend="reference" (module docstring)."""
+        return self.backend == "pallas" and _kops().engages(self.lcfg.budget)
+
     def predict(self, models: SVModel, x: Array) -> Array:
+        if self._engaged():
+            a = jnp.where(rkhs.active_mask(models), models.alpha, 0.0)
+            return _kops().sv_predict_spec(self.lcfg.kernel, x, models.sv, a)
         return jax.vmap(lambda f, xi: self.predict_one(f, xi))(models, x)
+
+    def predict_batch(self, models: SVModel, lids: Array, Xb: Array) -> Array:
+        # the serving bucket path: one fused sv_predict launch answers
+        # the whole bucket.  Row floats still match predict_one —
+        # ops.sv_predict's blocks and engagement never depend on the
+        # batch size (kernels/ops.py), and each row is its own grid
+        # cell — so the serving bit-exactness contract holds on the
+        # fused path too (tests/test_backend_parity.py pins it).
+        if self._engaged():
+            picked = jax.tree.map(lambda v: v[lids], models)
+            a = jnp.where(rkhs.active_mask(picked), picked.alpha, 0.0)
+            return _kops().sv_predict_spec(self.lcfg.kernel, Xb,
+                                           picked.sv, a)
+        return super().predict_batch(models, lids, Xb)
 
     def update(self, state, example):
         return jax.vmap(functools.partial(learners.update, self.lcfg))(
             state, example)
+
+    # one shared predict feeds both the service-error record and the
+    # learner update — half the per-round Gram work of the composed
+    # path, same floats (kernel_update_from_yhat is kernel_update with
+    # the prediction supplied)
+    fused_scan_round = True
+
+    def round_stacked(self, state, example):
+        x, y = example
+        yhat = self.predict(state.model, x)
+        upd = functools.partial(learners.kernel_update_from_yhat, self.lcfg)
+        new_state, losses = jax.vmap(
+            lambda st, xi, yi, yh: upd(st, (xi, yi), yh))(state, x, y, yhat)
+        return new_state, losses, yhat
 
     def average_stacked(self, models: SVModel):
         fbar = rkhs.average_stacked(models)           # budget m*tau
@@ -348,12 +405,16 @@ class SVSubstrate(Substrate):
         )
 
     def dist_to_ref(self, models: SVModel, ref: SVModel) -> Array:
-        if self.backend == "pallas":
+        # engage-gated like every pallas branch: the dynamic protocol's
+        # sync decisions feed the byte ledger, so the non-engaged
+        # pallas path must be the reference expression verbatim
+        if self.backend == "pallas" and _kops().engages(
+                self.lcfg.budget, self.sync_budget):
             return jax.vmap(lambda f: self.dist_one(f, ref))(models)
         return rkhs.stacked_dist_to(self.lcfg.kernel, models, ref)
 
     def divergence(self, models: SVModel) -> Array:
-        if self.backend == "pallas":
+        if self._engaged():
             fbar = rkhs.average_stacked(models)
             return jnp.mean(self.dist_to_ref(models, fbar))
         return rkhs.divergence_stacked(self.lcfg.kernel, models)
@@ -386,14 +447,16 @@ class SVSubstrate(Substrate):
 
     def predict_one(self, model: SVModel, x: Array) -> Array:
         spec = self.lcfg.kernel
-        if self.backend == "pallas":
+        if self._engaged():
             a = jnp.where(rkhs.active_mask(model), model.alpha, 0.0)
-            return (_kops().gram_spec(spec, x[None], model.sv) @ a)[0]
+            return _kops().sv_predict_spec(
+                spec, x[None], model.sv[None], a[None])[0]
         return rkhs.predict(spec, model, x[None])[0]
 
     def dist_one(self, model: SVModel, ref: SVModel) -> Array:
         spec = self.lcfg.kernel
-        if self.backend == "pallas":
+        if self.backend == "pallas" and _kops().engages(
+                model.sv.shape[0], ref.sv.shape[0]):
             af = jnp.where(rkhs.active_mask(model), model.alpha, 0.0)
             ag = jnp.where(rkhs.active_mask(ref), ref.alpha, 0.0)
             return _kops().rkhs_dist_sq_spec(spec, model.sv, ref.sv, af, ag)
@@ -643,6 +706,23 @@ class LinearSubstrate(_PrimalSubstrate):
         return jax.vmap(functools.partial(learners.update, self.lcfg))(
             state, example)
 
+    # linear_sgd's round is exactly the fused primal step with the
+    # identity feature map; linear_pa (and the non-engaged / reference
+    # cases) keep the composed expressions
+    fused_scan_round = True
+
+    def round_stacked(self, state, example):
+        x, y = example
+        if (self.backend == "pallas" and self.lcfg.algo == "linear_sgd"
+                and _kops().engages(x.shape[0], self.lcfg.dim)):
+            w_new, b_new, ell, yhat = _kops().fused_primal_step(
+                x, y, state.w, state.b, loss=self.loss,
+                eta=self.lcfg.eta, lam=self.lcfg.lam)
+            return LinearLearnerState(w=w_new, b=b_new), ell, yhat
+        yhat = self.predict(state, x)
+        new_state, ell = self.update(state, example)
+        return new_state, ell, yhat
+
     def init_node(self, idx: int):
         return learners.init_state(self.lcfg, idx)
 
@@ -707,9 +787,12 @@ class RFFSubstrate(_PrimalSubstrate):
         return RFFLearnerState
 
     def _phi(self, X2d: Array) -> Array:
-        """phi over a batch of rows: (n, d) -> (n, D)."""
+        """phi over a batch of rows: (n, d) -> (n, D).  Engage-aware:
+        below the Pallas threshold the pallas backend featurizes with
+        the reference map, bit-identical to backend="reference"."""
         W, b = _rff_consts(self.spec)
-        if self.backend == "pallas":
+        if self.backend == "pallas" and _kops().engages(
+                X2d.shape[0], self.spec.num_features):
             return _kops().rff_features(X2d, jnp.asarray(W), jnp.asarray(b))
         return rff.featurize(self.spec, jnp.asarray(W), jnp.asarray(b), X2d)
 
@@ -744,6 +827,29 @@ class RFFSubstrate(_PrimalSubstrate):
         x, y = example
         Z = self._phi(x)                               # (m, D)
         return jax.vmap(self._update_with_features)(state, Z, y)
+
+    # the whole stacked round — featurize + predict + loss/grad +
+    # NORMA update — as one computation; under an engaged pallas
+    # backend it is ONE kernel launch (kernels.ops.fused_primal_step)
+    fused_scan_round = True
+
+    def round_stacked(self, state, example):
+        x, y = example
+        if self.backend == "pallas" and _kops().engages(
+                x.shape[0], self.spec.num_features):
+            W, b = _rff_consts(self.spec)
+            w_new, b_new, ell, yhat = _kops().fused_primal_step(
+                x, y, state.w, state.b,
+                W=jnp.asarray(W), bias=jnp.asarray(b),
+                scale=float(np.sqrt(2.0 / self.spec.num_features)),
+                loss=self.loss, eta=self.eta, lam=self.lam)
+            return RFFLearnerState(w=w_new, b=b_new), ell, yhat
+        # unfused: one shared featurize (instead of the composed
+        # path's two), the exact predict expression, the exact update
+        Z = self._phi(x)                               # (m, D)
+        yhat = jnp.sum(state.w * Z, axis=-1) + state.b
+        new_state, ell = jax.vmap(self._update_with_features)(state, Z, y)
+        return new_state, ell, yhat
 
     def init_node(self, idx: int):
         return rff.init_state(self.spec)

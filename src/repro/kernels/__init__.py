@@ -1,4 +1,9 @@
-"""Pallas TPU kernels for the paper compute hot-spots."""
-from . import ops, ref
+"""Pallas TPU kernels for the paper compute hot-spots.
 
-__all__ = ["ops", "ref"]
+``ops`` is the public face (padding, autotuned blocks, interpret-mode
+selection, tiny-shape fallback); ``autotune`` owns block-size choice;
+``fused`` holds the per-round fused kernels; ``ref`` the jnp oracles.
+"""
+from . import autotune, fused, ops, ref
+
+__all__ = ["autotune", "fused", "ops", "ref"]

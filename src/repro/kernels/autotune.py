@@ -1,0 +1,175 @@
+"""Block-size autotuner for the Pallas kernels (DESIGN.md Sec. 12).
+
+The seed-era wrappers hardcoded 128x128 tiles.  That is the *floor*
+the MXU imposes, not the optimum: for large operands bigger tiles
+amortize grid overhead and raise MXU occupancy, while for small
+operands a 512-wide tile only pads.  This module owns the choice:
+
+``tuned_blocks(op, dims, ...)`` returns the tile sizes ops.py launches
+with, resolved in three tiers:
+
+1. **cache hit** — a per-process table keyed on
+   ``(op, dims, dtype, kind)`` (the issue's per-(shape, dtype, kind)
+   contract).  Tile choice is deterministic per key, which is what
+   keeps jit caches warm: the same substrate shapes always resolve to
+   the same static block arguments, so a value-equal substrate
+   re-trace hits the existing executable (the recompile-regression
+   test pins this with ``telemetry.probe.CompileCounter``).
+2. **interpret-safe defaults (CPU)** — off-TPU the kernels run in
+   interpret mode, where "timing" tiles measures the Python
+   interpreter, so no search runs: the default is the alignment floor
+   (128) clipped to the padded operand, recorded in the cache with
+   ``source="default"``.
+3. **measured search (TPU)** — on a real TPU backend, and only when
+   not called mid-trace (a search launches kernels; doing that while
+   tracing an outer jit would nest tracers), each aligned candidate
+   tile is timed via the caller-provided ``measure`` thunk and the
+   fastest wins (``source="search"``).
+
+The cache is process-local on purpose.  Persisting tunings across
+processes would couple benchmark runs to stale machine profiles; a
+process re-tunes once per distinct shape, which for this workload
+(a handful of static substrate shapes per run) is noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+
+_ALIGN = 128                      # MXU/VPU alignment floor
+_CANDIDATES = (128, 256, 512)     # aligned tile candidates per axis
+_SEARCH_ITERS = 3                 # timing iterations per candidate
+
+
+@dataclasses.dataclass(frozen=True)
+class TileKey:
+    """Cache key: one tile choice per (op, operand dims, dtype, kind)."""
+
+    op: str
+    dims: Tuple[int, ...]
+    dtype: str
+    kind: str
+
+
+@dataclasses.dataclass(frozen=True)
+class TileChoice:
+    """A resolved tile assignment and where it came from."""
+
+    blocks: Tuple[int, ...]
+    source: str                   # "default" | "search" | "pinned"
+
+
+_CACHE: Dict[TileKey, TileChoice] = {}
+
+
+def _round_up(n: int, mult: int = _ALIGN) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _tracing() -> bool:
+    """True when called under an active jax trace — searching would
+    launch kernels inside the outer tracer, so the resolver must not."""
+    try:
+        return not jax.core.trace_state_clean()
+    except AttributeError:   # future jax: assume eager only when provable
+        return True
+
+
+def candidates_for(size: int) -> Tuple[int, ...]:
+    """Aligned tile sizes worth trying for one axis of extent ``size``:
+    every candidate <= the padded extent (a tile larger than the padded
+    operand only adds zero rows), always including the 128 floor."""
+    padded = _round_up(max(int(size), 1))
+    return tuple(c for c in _CANDIDATES if c <= padded) or (_ALIGN,)
+
+
+def default_blocks(dims: Sequence[int]) -> Tuple[int, ...]:
+    """The no-search choice: the alignment floor per axis (clipped via
+    candidates_for so a 40-row operand gets a 128 tile, not 512)."""
+    return tuple(candidates_for(s)[0] for s in dims)
+
+
+def _time_thunk(thunk: Callable[[], object]) -> float:
+    jax.block_until_ready(thunk())          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(_SEARCH_ITERS):
+        jax.block_until_ready(thunk())
+    return time.perf_counter() - t0
+
+
+def tuned_blocks(
+    op: str,
+    dims: Sequence[int],
+    *,
+    dtype: str = "float32",
+    kind: str = "",
+    measure: Optional[Callable[[Tuple[int, ...]], object]] = None,
+) -> Tuple[int, ...]:
+    """The tile sizes to launch ``op`` with for operand extents ``dims``
+    (one entry per blocked axis).
+
+    ``measure(blocks)`` — when provided and the backend is a real TPU —
+    must run the kernel once with the given tile assignment and return
+    a value to block on; the resolver times each candidate assignment
+    and caches the winner.  Off-TPU (interpret mode) or mid-trace the
+    defaults are cached without any launch.
+    """
+    key = TileKey(op=op, dims=tuple(int(s) for s in dims),
+                  dtype=str(dtype), kind=str(kind))
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit.blocks
+
+    if measure is None or not _on_tpu() or _tracing():
+        choice = TileChoice(default_blocks(key.dims), "default")
+        _CACHE[key] = choice
+        return choice.blocks
+
+    best, best_t = None, float("inf")
+    for blocks in _grid(tuple(candidates_for(s) for s in key.dims)):
+        try:
+            t = _time_thunk(lambda: measure(blocks))
+        except Exception:        # a candidate may exceed VMEM — skip it
+            continue
+        if t < best_t:
+            best, best_t = blocks, t
+    if best is None:             # every candidate failed: fall back
+        choice = TileChoice(default_blocks(key.dims), "default")
+    else:
+        choice = TileChoice(best, "search")
+    _CACHE[key] = choice
+    return choice.blocks
+
+
+def _grid(axes: Tuple[Tuple[int, ...], ...]) -> Tuple[Tuple[int, ...], ...]:
+    """Cartesian product of per-axis candidate tuples."""
+    out: Tuple[Tuple[int, ...], ...] = ((),)
+    for ax in axes:
+        out = tuple(prefix + (c,) for prefix in out for c in ax)
+    return out
+
+
+# -- introspection / test hooks ---------------------------------------------
+
+
+def pin(op: str, dims: Sequence[int], blocks: Sequence[int], *,
+        dtype: str = "float32", kind: str = "") -> None:
+    """Force a tile choice for one key (benchmarking what-ifs)."""
+    key = TileKey(op, tuple(int(s) for s in dims), str(dtype), str(kind))
+    _CACHE[key] = TileChoice(tuple(int(b) for b in blocks), "pinned")
+
+
+def cache_info() -> Dict[TileKey, TileChoice]:
+    """A snapshot of the resolution table (copy — mutations don't leak)."""
+    return dict(_CACHE)
+
+
+def clear_cache() -> None:
+    _CACHE.clear()

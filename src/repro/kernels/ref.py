@@ -5,6 +5,7 @@ suite sweeps shapes/dtypes and asserts allclose against them.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -33,3 +34,46 @@ def quadform_ref(X, Y, alpha, beta, *, kind="gaussian", gamma=1.0,
                  degree=3, coef0=1.0):
     K = gram_ref(X, Y, kind=kind, gamma=gamma, degree=degree, coef0=coef0)
     return alpha.astype(jnp.float32) @ K @ beta.astype(jnp.float32)
+
+
+def sv_predict_ref(X, SV, A, *, kind="gaussian", gamma=1.0, degree=3,
+                   coef0=1.0):
+    """Masked batched SV predictions: yhat_i = sum_j k(X_i, SV_ij) A_ij.
+
+    X (B, d), SV (B, N, d), A (B, N); padded support slots must carry
+    zero coefficients (that is the masking contract — k(x, 0) is
+    multiplied by 0, never looked at)."""
+
+    def one(x, S, a):
+        return gram_ref(x[None, :], S, kind=kind, gamma=gamma,
+                        degree=degree, coef0=coef0)[0] @ a.astype(jnp.float32)
+
+    return jax.vmap(one)(X, SV, A)
+
+
+def _loss_grad_ref(loss, yhat, y):
+    if loss == "hinge":
+        ell = jnp.maximum(0.0, 1.0 - y * yhat)
+        return ell, jnp.where(ell > 0.0, -y, 0.0)
+    r = yhat - y
+    return 0.5 * r * r, r
+
+
+def primal_step_ref(X, Yl, w, b, *, W=None, bias=None, scale=1.0,
+                    loss="hinge", eta=0.5, lam=0.01):
+    """Oracle for fused.primal_step_pallas: one online round for B
+    stacked primal learners -> (w_new, b_new, ell, yhat)."""
+    X = X.astype(jnp.float32)
+    Yl = Yl.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if W is not None:
+        z = scale * jnp.cos(X @ W.T.astype(jnp.float32)
+                            + bias.astype(jnp.float32))
+    else:
+        z = X
+    yhat = jnp.sum(w * z, axis=-1) + b
+    ell, g = _loss_grad_ref(loss, yhat, Yl)
+    w_new = (1.0 - eta * lam) * w - eta * g[:, None] * z
+    b_new = b - eta * g
+    return w_new, b_new, ell, yhat

@@ -13,7 +13,11 @@ timeline (the ``repro.runtime`` clock):
   *static bucket sizes* and answered by one jitted
   ``Substrate.predict_batch`` call per bucket (each bucket size keys
   its own compile-cache entry, the same static-shape discipline as
-  ``engine.sweep``'s grouped compiles);
+  ``engine.sweep``'s grouped compiles).  Under an engaged
+  ``backend="pallas"`` SV substrate the whole bucket is ONE fused
+  ``kernels.ops.sv_predict`` launch — the serving hot path and the
+  measured kernel are the same code (the ``bucket_predict_hits_pallas``
+  claim in benchmarks/bench_kernels.py counts the launch to prove it);
 - **labeled feedback**, queued per learner and applied as online
   updates: the moment every learner has its next example, the engine
   runs one protocol round through the scan engine's OWN step function

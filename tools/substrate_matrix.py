@@ -2,22 +2,30 @@
 """Quick substrate matrix check (run in CI).
 
 Runs every substrate (SV / RFF / linear) x protocol kind
-{periodic, dynamic} through BOTH drivers — the device-resident scan
-engine (``core.engine.run``) and the asynchronous event-driven harness
-(``repro.runtime.run_async_simulation``) — and asserts the invariants
-every cell must satisfy:
+{periodic, dynamic} x backend {reference, pallas} through THREE
+drivers — the device-resident scan engine (``core.engine.run``), the
+asynchronous event-driven harness (``repro.runtime``), and the online
+serving engine (``repro.serving.serve_stream``) — and asserts the
+invariants every cell must satisfy:
 
 - finite cumulative loss, at least one synchronization;
 - byte ledger consistent with the sync count (for the fixed-payload
   substrates, total bytes == num_syncs * 2 m (p+1) B exactly);
 - the engine and the zero-latency async run agree on the sync count
-  for the fixed-payload substrates (their aggregation is exact).
+  for the fixed-payload substrates (their aggregation is exact);
+- the serving replay's protocol view (syncs, bytes) equals the scan
+  engine's for the same stream;
+- the pallas backend's ledger (syncs, bytes, cumulative loss) is
+  BIT-IDENTICAL to the reference backend's per driver — at these
+  sizes every pallas substrate runs its engage-aware reference
+  expressions, so Def. 1 decisions cannot depend on the backend.
 
 One line per cell; exits non-zero on the first violated invariant.
 Usage:  PYTHONPATH=src python tools/substrate_matrix.py
 """
 from __future__ import annotations
 
+import dataclasses
 import sys
 from pathlib import Path
 
@@ -36,6 +44,7 @@ from repro.core.substrate import (LinearSubstrate, RFFSubstrate,  # noqa: E402
 from repro.data import susy_stream  # noqa: E402
 from repro.runtime import (AsyncProtocolConfig, SystemConfig,  # noqa: E402
                            run_async_simulation)
+from repro.serving.engine import serve_stream  # noqa: E402
 
 T, M, D = 80, 3, 8
 
@@ -63,29 +72,56 @@ def kinds():
     ]
 
 
+def _ledger(res):
+    return (int(res.num_syncs), int(res.total_bytes),
+            float(res.total_loss))
+
+
+def _run_cell(sub, pcfg, acfg, X, Y):
+    """All three drivers for one (substrate, kind, backend) cell."""
+    res = engine.run(sub, pcfg, X, Y)
+    res_a = run_async_simulation(sub, acfg, X, Y, sys_cfg=SystemConfig(),
+                                 record_divergence=False)
+    res_s = serve_stream(sub, pcfg, X, Y)
+    return res, res_a, res_s
+
+
 def main() -> int:
     X, Y = susy_stream(T=T, m=M, d=D, seed=0)
     failures = 0
     for sname, sub, num_params in substrates():
         for kname, pcfg, acfg in kinds():
-            res = engine.run(sub, pcfg, X, Y)
-            res_a = run_async_simulation(sub, acfg, X, Y,
-                                         sys_cfg=SystemConfig(),
-                                         record_divergence=False)
-            ok = (np.isfinite(res.total_loss)
-                  and np.isfinite(res_a.total_loss)
-                  and res.num_syncs > 0 and res_a.num_syncs > 0
-                  and res.total_bytes > 0)
-            if num_params is not None:
-                per_sync = sync_bytes_linear(num_params, M)
-                ok = ok and res.total_bytes == res.num_syncs * per_sync
-                ok = ok and res_a.total_bytes == res_a.num_syncs * per_sync
-                ok = ok and res.num_syncs == res_a.num_syncs
-            print(f"substrate={sname} kind={kname} engine_syncs="
-                  f"{res.num_syncs} engine_bytes={res.total_bytes} "
-                  f"async_syncs={res_a.num_syncs} "
-                  f"async_bytes={res_a.total_bytes} ok={ok}")
-            failures += not ok
+            per_backend = {}
+            for backend in ("reference", "pallas"):
+                bsub = dataclasses.replace(sub, backend=backend)
+                res, res_a, res_s = _run_cell(bsub, pcfg, acfg, X, Y)
+                ok = (np.isfinite(res.total_loss)
+                      and np.isfinite(res_a.total_loss)
+                      and res.num_syncs > 0 and res_a.num_syncs > 0
+                      and res.total_bytes > 0
+                      # serving replays the same stream: same protocol
+                      and res_s.num_syncs == res.num_syncs
+                      and res_s.total_bytes == res.total_bytes)
+                if num_params is not None:
+                    per_sync = sync_bytes_linear(num_params, M)
+                    ok = ok and res.total_bytes == res.num_syncs * per_sync
+                    ok = (ok and
+                          res_a.total_bytes == res_a.num_syncs * per_sync)
+                    ok = ok and res.num_syncs == res_a.num_syncs
+                per_backend[backend] = tuple(
+                    _ledger(r) for r in (res, res_a, res_s))
+                print(f"substrate={sname} kind={kname} backend={backend} "
+                      f"engine_syncs={res.num_syncs} "
+                      f"engine_bytes={res.total_bytes} "
+                      f"async_syncs={res_a.num_syncs} "
+                      f"async_bytes={res_a.total_bytes} "
+                      f"serve_syncs={res_s.num_syncs} "
+                      f"serve_bytes={res_s.total_bytes} ok={ok}")
+                failures += not ok
+            parity = per_backend["reference"] == per_backend["pallas"]
+            print(f"substrate={sname} kind={kname} "
+                  f"backend_ledger_bitwise_equal={parity}")
+            failures += not parity
     print(f"substrate_matrix: {failures} failures")
     return 1 if failures else 0
 
