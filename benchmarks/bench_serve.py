@@ -20,10 +20,27 @@ Registered claims (asserted here, grepped by CI):
   gate is deliberately loose because shared CI runners are noisy —
   the honest multiple is in the ``speedup`` column).
 
-Latency percentiles / queue depths are reported as derived columns,
-never gated — they are simulated-timeline quantities, deterministic
-under seed, but their *interest* is the trade-off shape, not a
-threshold.
+Max sustainable QPS at a p99 latency SLO (DESIGN.md Sec. 13,
+EXPERIMENTS.md §Serving): a doubling + bisection search over the
+Poisson arrival rate finds the largest rate at which a policy serves
+with p99 latency <= SLO and zero requests shed — run once for the
+static tick grid and once for continuous batching, same seeds, same
+stream, same slot pool.  All quantities in the search live on the
+simulated clock, so the resulting QPS numbers are deterministic under
+seed and CAN be gated:
+
+- ``continuous_beats_static_p99`` — continuous batching sustains at
+  least the static tick grid's QPS at the same SLO;
+- ``protocol_view_identical_under_load`` — every probe of both
+  searches (including overloaded, shedding probes) reproduced
+  ``engine.run`` bitwise on losses and integer-exactly on bytes;
+- ``shed_only_when_over_capacity`` — with a bounded queue, a probe
+  at a fraction of nominal capacity (max_bucket / predict_cost) sheds
+  nothing, and a probe far above it sheds.
+
+Latency percentiles / queue depths remain reported-never-gated
+derived columns; the QPS-at-SLO numbers are gated because they are
+event-clock quantities, not host timings.
 """
 from __future__ import annotations
 
@@ -41,11 +58,19 @@ from repro.core.rkhs import KernelSpec
 from repro.core.substrate import RFFSubstrate, substrate_of
 from repro.data import susy_stream
 from repro.runtime import SystemConfig
-from repro.serving import serve_stream
+from repro.serving import PoissonArrivals, serve_stream
 
 from .common import Row, timeit
 
 T, M, D_IN = 600, 4, 8
+
+# --- QPS-at-SLO search fixture (simulated units) ---------------------------
+QPS_SLO = 0.3              # p99 latency target
+QPS_PREDICT_COST = 0.04    # simulated seconds per predict launch
+QPS_TICK = 0.25            # static policy's grid interval
+QPS_BUCKETS = (1, 2, 4, 8, 16)
+QPS_QUEUE = 128            # bounded queue for the search probes
+QPS_CAPACITY = QPS_BUCKETS[-1] / QPS_PREDICT_COST   # 400 req/s nominal
 
 
 def _kernel_cfg():
@@ -109,6 +134,67 @@ def _batched_predict_speedup(X, Y, bucket=32, reps=20):
     return batched, solo, solo / batched
 
 
+def _linear_cfg():
+    return LearnerConfig(algo="linear_sgd", loss="hinge", eta=0.1, lam=0.001,
+                         dim=D_IN)
+
+
+def _qps_probe(policy, rate, X, Y, pcfg, ref, *, seed=0,
+               max_queue=QPS_QUEUE):
+    """One serving run at Poisson rate ``rate``; returns
+    (sustainable, p99, shed, parity_ok)."""
+    res = serve_stream(
+        _linear_cfg(), pcfg, X, Y,
+        arrivals=PoissonArrivals(rate=rate, seed=seed), query_seed=seed,
+        policy=policy, slots=1, buckets=QPS_BUCKETS,
+        predict_cost=QPS_PREDICT_COST, tick_interval=QPS_TICK,
+        slo=QPS_SLO, max_queue=max_queue, overload="shed",
+        sys_cfg=SystemConfig(seed=0, base_compute=0.1))
+    parity = bool(
+        np.array_equal(ref.cumulative_loss, res.sim.cumulative_loss)
+        and np.array_equal(ref.cumulative_bytes, res.sim.cumulative_bytes)
+        and np.array_equal(ref.sync_rounds, res.sim.sync_rounds))
+    p99 = res.latency_percentiles()["p99"]
+    sustainable = bool(p99 <= QPS_SLO and res.num_shed == 0
+                       and res.num_requests > 0)
+    return sustainable, p99, res.num_shed, parity
+
+
+def _max_qps(policy, X, Y, pcfg, ref, *, bisect_iters=6):
+    """Largest Poisson rate sustaining p99 <= SLO with zero sheds:
+    double from 16 until a probe fails (cap 2048), then bisect.
+    Deterministic — every probe runs on the seeded event clock."""
+    probes = 0
+    all_parity = True
+    lo, lo_p99 = 0.0, 0.0
+
+    rate = 16.0
+    while rate <= 2048.0:
+        ok, p99, _, parity = _qps_probe(policy, rate, X, Y, pcfg, ref)
+        probes += 1
+        all_parity &= parity
+        if not ok:
+            break
+        lo, lo_p99 = rate, p99
+        rate *= 2.0
+    else:
+        return lo, lo_p99, probes, all_parity
+    if lo == 0.0:       # never sustainable, even at the smallest probe
+        return 0.0, p99, probes, all_parity
+
+    hi = rate
+    for _ in range(bisect_iters):
+        mid = 0.5 * (lo + hi)
+        ok, p99, _, parity = _qps_probe(policy, mid, X, Y, pcfg, ref)
+        probes += 1
+        all_parity &= parity
+        if ok:
+            lo, lo_p99 = mid, p99
+        else:
+            hi = mid
+    return lo, lo_p99, probes, all_parity
+
+
 def run(quick: bool = False):
     t = 150 if quick else T
     X, Y = susy_stream(T=t, m=M, d=D_IN, seed=0)
@@ -142,6 +228,56 @@ def run(quick: bool = False):
         f"serving_losses_identical={ok_loss};"
         f"serving_bytes_identical={ok_bytes};"
         f"batched_predict_faster_2x={faster}"))
+
+    # --- max sustainable QPS at the p99 SLO, static vs continuous ----------
+    tq = 30 if quick else 60
+    Xq, Yq = susy_stream(T=tq, m=M, d=D_IN, seed=0)
+    pcfg_q = ProtocolConfig(kind="dynamic", delta=2.0)
+    ref_q = engine.run(_linear_cfg(), pcfg_q, Xq, Yq)
+    iters = 4 if quick else 6
+
+    qps = {}
+    parity_all = True
+    for policy in ("tick", "continuous"):
+        wall0 = time.perf_counter()
+        max_rate, p99, probes, parity = _max_qps(
+            policy, Xq, Yq, pcfg_q, ref_q, bisect_iters=iters)
+        wall = time.perf_counter() - wall0
+        qps[policy] = max_rate
+        parity_all &= parity
+        rows.append(Row(
+            f"serve/qps_{policy}", wall * 1e6 / max(probes, 1),
+            f"max_qps={max_rate:.0f};p99_at_max={p99:.3f};slo={QPS_SLO};"
+            f"probes={probes};parity={parity}"))
+
+    # admission sanity on the same fixture, tiny queue: well under
+    # nominal capacity nothing sheds; far over it, admission must shed.
+    _, _, shed_under, par_u = _qps_probe(
+        "continuous", 0.25 * QPS_CAPACITY, Xq, Yq, pcfg_q, ref_q,
+        max_queue=16)
+    _, _, shed_over, par_o = _qps_probe(
+        "continuous", 3.0 * QPS_CAPACITY, Xq, Yq, pcfg_q, ref_q,
+        max_queue=16)
+    parity_all &= par_u and par_o
+    shed_sane = bool(shed_under == 0 and shed_over > 0)
+    rows.append(Row(
+        "serve/admission", 0.0,
+        f"shed_under_capacity={shed_under};shed_over_capacity={shed_over};"
+        f"capacity={QPS_CAPACITY:.0f}"))
+
+    cont_wins = bool(qps["continuous"] >= qps["tick"] and
+                     qps["continuous"] > 0)
+    assert cont_wins, (
+        f"continuous batching sustains {qps['continuous']:.0f} QPS < "
+        f"static {qps['tick']:.0f} QPS at p99 <= {QPS_SLO}")
+    assert parity_all, "protocol view diverged under load"
+    assert shed_sane, (
+        f"admission shed {shed_under} under capacity / {shed_over} over")
+    rows.append(Row(
+        "serve/slo_claims", 0.0,
+        f"continuous_beats_static_p99={cont_wins};"
+        f"protocol_view_identical_under_load={parity_all};"
+        f"shed_only_when_over_capacity={shed_sane}"))
     return rows
 
 

@@ -1,16 +1,24 @@
 """Serving launch surface: the kernel serving engine on a learner
 mesh, plus the LM prefill/decode steps the dry-run lowers.
 
-Kernel serving (DESIGN.md Sec. 10)
-----------------------------------
+Kernel serving (DESIGN.md Secs. 10, 13)
+---------------------------------------
 ``make_kernel_serving_engine`` is the mesh-aware constructor for
 ``repro.serving.KernelServingEngine``: it builds the 1-D learner mesh
 (``launch.mesh.make_learner_mesh``) over the visible devices, places
 the stacked learner models with a learner-axis ``NamedSharding``, and
 the engine then routes every predict request to its *home shard* —
-per-tick micro-batches never mix learners from different shards, so
+launched micro-batches never mix learners from different shards, so
 the model gather inside ``Substrate.predict_batch`` stays shard-local.
-The protocol view remains bit-identical to the unmeshed engine
+Each shard gets its own slot pool, so ``slots`` is per shard: a
+``devices=4, slots=2`` engine can have 8 predict batches in flight.
+All scheduler knobs forward through ``engine_kw`` — ``policy``
+("tick" grid or "continuous" slotted batching), ``slots``, the
+admission controls ``max_queue`` / ``overload`` ("shed" or "defer") /
+``defer_interval``, and the latency budget ``slo`` / ``max_wait`` the
+continuous policy coalesces under.  None of them can change the
+protocol view: the scheduling policy is a pure latency/throughput
+knob, bit-identical losses and integer-exact bytes under all of them
 (tests/test_serving.py runs the routed path on forced host devices).
 
 LM serving (DESIGN.md Sec. 4)
@@ -51,10 +59,13 @@ def make_kernel_serving_engine(
     ``devices``: how many devices the ``learners`` mesh axis spans
     (default 0 = all visible; m must divide evenly).  Every other
     keyword forwards to the engine constructor — protocol, system
-    model, tick cadence, buckets.  With one visible device this
-    degrades gracefully to the unmeshed engine (the mesh exists, the
-    routing is the identity), so the same launch code serves a laptop
-    and a pod.
+    model, batch policy (``policy="tick" | "continuous"``), slot pool
+    size (``slots``, per shard), admission control (``max_queue``,
+    ``overload``, ``defer_interval``), latency budget (``slo``,
+    ``max_wait``), tick cadence, buckets.  With one visible device
+    this degrades gracefully to the unmeshed engine (the mesh exists,
+    the routing is the identity), so the same launch code serves a
+    laptop and a pod.
     """
     from repro.launch.mesh import make_learner_mesh
 

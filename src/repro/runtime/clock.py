@@ -35,6 +35,7 @@ class Event:
     time: float
     seq: int
     fn: Callable[[], None] = dataclasses.field(compare=False)
+    cancelled: bool = dataclasses.field(default=False, compare=False)
 
 
 class Clock:
@@ -56,17 +57,44 @@ class Clock:
         self.events_processed: int = 0
         self.tracer = tracer
 
-    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+    def schedule(self, delay: float, fn: Callable[[], None]) -> Event:
         if delay < 0:
             raise ValueError(f"negative delay {delay}")
-        heapq.heappush(self._heap, Event(self.now + delay, self._seq, fn))
+        ev = Event(self.now + delay, self._seq, fn)
+        heapq.heappush(self._heap, ev)
         self._seq += 1
+        return ev
+
+    def schedule_at(self, time: float, fn: Callable[[], None]) -> Event:
+        """Schedule at an *absolute* simulated time, preserved exactly.
+
+        ``schedule(t - now, fn)`` round-trips the target through a
+        subtraction and a re-addition, so a value that IS representable
+        (a tick-grid point ``k * interval``, say) can come back a ulp
+        off after ``now + (t - now)``.  Grid-sensitive callers (the
+        serving tick scheduler) use this instead: the event fires at
+        exactly the float passed in.  Times in the past are clamped to
+        ``now`` (fire as soon as the queue reaches them).
+        """
+        ev = Event(max(self.now, float(time)), self._seq, fn)
+        heapq.heappush(self._heap, ev)
+        self._seq += 1
+        return ev
+
+    def cancel(self, ev: Event) -> None:
+        """Mark a scheduled event dead: it is skipped when popped (the
+        heap is not rebuilt), advances nothing, and is not counted in
+        ``events_processed``.  Cancelling twice, or cancelling an event
+        that already fired, is a no-op."""
+        ev.cancelled = True
 
     def run(self, max_events: Optional[int] = None) -> None:
         """Process events until the queue drains (or max_events)."""
         n = 0
         while self._heap:
             ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
             assert ev.time >= self.now, "event queue went backwards"
             self.now = ev.time
             ev.fn()

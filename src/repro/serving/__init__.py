@@ -1,21 +1,35 @@
-"""Online serving layer (DESIGN.md Sec. 10).
+"""Online serving layer (DESIGN.md Secs. 10, 13).
 
 Front door: the substrate-native :class:`KernelServingEngine` —
-micro-batched predict requests + in-flight online updates + background
-adaptive synchronization for the paper's m-learner systems, all on one
-seeded event timeline.  ``serve_stream`` replays a (T, m, d) protocol
-stream through it; the protocol view is bit-identical to
-``core.engine.run`` (tests/test_serving.py).
+predict requests scheduled by a pluggable batch policy (continuous
+slotted batching or the legacy tick grid, `serving/scheduler.py`),
+in-flight online updates, admission control with backpressure, and
+background adaptive synchronization for the paper's m-learner
+systems, all on one seeded event timeline.  Several protocol tenants
+can share one engine and slot pool.  ``serve_stream`` replays a
+(T, m, d) protocol stream through it — with query traffic from the
+seeded arrival processes of `serving/arrivals.py` riding along — and
+the protocol view is bit-identical to ``core.engine.run`` under every
+scheduling policy, arrival model and overload level
+(tests/test_serving.py).
 
 ``repro.serving.lm`` holds the separate LM token-serving engine
 (continuous-batching prefill/decode over ``repro.models``); it is not
 imported here so the kernel-serving path never pays for the LM model
 stack — ``import repro.serving.lm`` explicitly to use it.
 """
+from .arrivals import (ARRIVAL_KINDS, ArrivalProcess, BurstyArrivals,
+                       DiurnalArrivals, PoissonArrivals, make_arrivals)
 from .engine import (DEFAULT_BUCKETS, KernelServingEngine, PredictRequest,
                      ServeResult, serve_stream)
+from .scheduler import (POLICIES, ContinuousScheduler, SlotPool,
+                        SlotScheduler, TickScheduler, make_scheduler)
 
 __all__ = [
+    "ARRIVAL_KINDS", "ArrivalProcess", "BurstyArrivals", "DiurnalArrivals",
+    "PoissonArrivals", "make_arrivals",
     "DEFAULT_BUCKETS", "KernelServingEngine", "PredictRequest",
     "ServeResult", "serve_stream",
+    "POLICIES", "ContinuousScheduler", "SlotPool", "SlotScheduler",
+    "TickScheduler", "make_scheduler",
 ]

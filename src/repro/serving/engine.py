@@ -1,4 +1,4 @@
-"""Substrate-native online serving engine (DESIGN.md Sec. 10).
+"""Substrate-native online serving engine (DESIGN.md Secs. 10, 13).
 
 The paper motivates the whole protocol as infrastructure for
 "low-latency real-time services": m distributed learners answer
@@ -9,21 +9,28 @@ expansion, random Fourier features, linear; ``backend="reference"`` or
 ``"pallas"`` — and runs three things on ONE seeded discrete-event
 timeline (the ``repro.runtime`` clock):
 
-- **predict requests**, micro-batched per tick into padded batches of
-  *static bucket sizes* and answered by one jitted
-  ``Substrate.predict_batch`` call per bucket (each bucket size keys
-  its own compile-cache entry, the same static-shape discipline as
-  ``engine.sweep``'s grouped compiles).  Under an engaged
-  ``backend="pallas"`` SV substrate the whole bucket is ONE fused
-  ``kernels.ops.sv_predict`` launch — the serving hot path and the
-  measured kernel are the same code (the ``bucket_predict_hits_pallas``
-  claim in benchmarks/bench_kernels.py counts the launch to prove it);
+- **predict requests**, scheduled by a pluggable batch policy
+  (``serving/scheduler.py``): ``policy="continuous"`` admits requests
+  into a fixed pool of in-flight slots per shard the moment they
+  arrive (continuous batching — launch size picked from queue depth
+  and the remaining latency budget); ``policy="tick"`` is the legacy
+  grid (wait for the next ``tick_interval`` point, drain through the
+  static bucket ladder).  Either way a launch is ONE jitted
+  ``Substrate.predict_batch`` call on a statically-shaped padded
+  bucket — under an engaged ``backend="pallas"`` SV substrate that is
+  one fused ``kernels.ops.sv_predict`` launch — and admission control
+  (bounded queue, defer-or-shed under overload) prices every decision
+  on the event clock;
 - **labeled feedback**, queued per learner and applied as online
   updates: the moment every learner has its next example, the engine
   runs one protocol round through the scan engine's OWN step function
   (``engine.make_protocol_step``), so losses, sync decisions, and the
   Sec. 3 byte ledger are bit-identical to ``engine.run`` on the same
-  stream *by construction* (tests/test_serving.py);
+  stream *by construction* (tests/test_serving.py).  Rounds apply at
+  feedback-completion time, independent of any predict scheduling —
+  which is what makes the parity contract hold under EVERY batch
+  policy, arrival process and overload level: no scheduler decision
+  can reach the protocol state;
 - **background synchronization**: when the dynamic/periodic protocol
   fires, the sync's Sec. 3 bytes are priced into simulated network
   time by the same seeded ``SystemModel`` the async runtime uses, and
@@ -31,27 +38,36 @@ timeline (the ``repro.runtime`` clock):
   path, but on the same timeline the latency percentiles are measured
   on.
 
+**Multi-tenancy.** Several protocol instances can share one engine,
+one slot pool and one admission queue: ``add_tenant(learner, pcfg)``
+registers another (substrate, protocol) pair over the same m learners
+and returns its tenant id; ``submit``/``feedback`` take ``tenant=``.
+Launches never mix tenants (each chunk is one (tenant, shard) group,
+so the model gather stays tenant-local), and each tenant's protocol
+view is independently bit-identical to its own ``engine.run`` — the
+sharing is purely of simulated compute and queue capacity.
+
 What is and isn't bit-identical: the *protocol view* (losses, errors,
 sync rounds, bytes, eps) matches ``engine.run`` exactly, because both
 compile the identical step over the identical carry
 (``engine.init_protocol_carry``).  The *serving metrics* (latency
-percentiles, queue depths, sync delays) have no scan-engine
-counterpart — they exist only on the event timeline — and are
-deterministic under the ``SystemConfig`` seed, like every
+percentiles, queue depths, shed/defer counts, sync delays) have no
+scan-engine counterpart — they exist only on the event timeline — and
+are deterministic under the ``SystemConfig`` seed, like every
 ``repro.runtime`` quantity.
 
 Mesh-awareness: pass ``mesh=`` (``launch.mesh.make_learner_mesh``) and
-the engine routes each request to its *home shard* — per-tick batches
-never mix learners from different shards, so the ``models[lids]``
-gather inside ``predict_batch`` stays shard-local — and places the
-stacked models with a learner-axis ``NamedSharding`` before the
-predict calls.  ``launch.serve.make_kernel_serving_engine`` wraps the
-mesh construction.  The protocol rounds themselves stay on the
-single-device path: serving ticks are latency-bound, not
-throughput-bound (the mesh-sharded *scan* engine of DESIGN.md Sec. 9
-owns bulk simulation).
+the engine routes each request to its *home shard* — batches never mix
+learners from different shards, so the ``models[lids]`` gather inside
+``predict_batch`` stays shard-local — each shard gets its own slot
+pool, and the stacked models are placed with a learner-axis
+``NamedSharding`` before the predict calls.
+``launch.serve.make_kernel_serving_engine`` wraps the mesh
+construction.
 
-Benchmarked in benchmarks/bench_serve.py (EXPERIMENTS.md §Serving).
+Benchmarked in benchmarks/bench_serve.py (EXPERIMENTS.md §Serving),
+including the max-sustainable-QPS-at-p99 search of continuous vs
+static batching.
 """
 from __future__ import annotations
 
@@ -59,7 +75,7 @@ import dataclasses
 import functools
 import itertools
 import math
-from collections import Counter, deque
+from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -75,11 +91,13 @@ from ..core.simulation import SimResult
 from ..core.substrate import Substrate
 from ..runtime.clock import Clock, SystemConfig, SystemModel
 from ..telemetry.trace import PID_SERVING, Tracer
+from .arrivals import ArrivalProcess
+from .scheduler import POLICIES, SlotScheduler, make_scheduler
 
 Array = jnp.ndarray
 
-#: Default padded-batch sizes.  Ascending; a tick's pending requests
-#: are chunked to the largest bucket and each chunk padded up to the
+#: Default padded-batch sizes.  Ascending; a launch's requests are
+#: chunked to the largest bucket and each chunk padded up to the
 #: smallest bucket that fits, so at most len(DEFAULT_BUCKETS) predict
 #: executables ever compile per substrate.
 DEFAULT_BUCKETS: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
@@ -93,17 +111,21 @@ DEFAULT_BUCKETS: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
 @dataclasses.dataclass
 class PredictRequest:
     """One predict request: answer ``x`` with learner ``learner``'s
-    current model.  ``arrival`` / ``done_time`` are simulated times on
-    the engine's event clock; ``latency`` is their difference (queue
-    wait until the next tick, plus any backlog of the single simulated
-    predict server, plus this batch's ``predict_cost``)."""
+    current model in tenant ``tenant``.  ``arrival`` / ``done_time``
+    are simulated times on the engine's event clock; ``latency`` is
+    their difference and includes every scheduling decision along the
+    way (queue wait, slot contention, deferral retries).  A ``shed``
+    request was refused by admission control and never answered."""
 
     uid: int
     learner: int
     x: np.ndarray                    # (d,)
     arrival: float
+    tenant: int = 0
     yhat: float = math.nan
     done_time: float = math.nan
+    shed: bool = False
+    deferrals: int = 0
 
     @property
     def done(self) -> bool:
@@ -121,20 +143,32 @@ class ServeResult:
     The protocol face is ``sim`` — a regular :class:`SimResult` whose
     losses/errors/bytes/sync decisions are bit-identical to
     ``engine.run`` on the same feedback stream (the serving parity
-    contract).  The serving face is everything a latency SLO cares
-    about: per-request latencies, per-tick queue depth, how big the
-    served batches were, and how long each background sync spent on
-    the simulated network.
+    contract), per tenant.  The serving face is everything a latency
+    SLO cares about: per-request latencies, queue-depth samples, how
+    big the served batches were, admission outcomes (shed/deferred),
+    and how long each background sync spent on the simulated network.
+
+    ``latencies``, ``sync_delays`` and ``rounds`` are the tenant's
+    own; ``queue_depth``, ``bucket_counts``, ``launches`` and the
+    admission counters are engine-wide (the queue and slot pool are
+    shared across tenants).  All summary statistics are NaN-free by
+    construction, including on empty and single-request runs
+    (tests/test_serving.py::test_serve_result_empty_and_single_stats).
     """
 
     sim: SimResult
     latencies: np.ndarray            # per served request, completion order
-    queue_depth: np.ndarray          # pending predicts at each tick start
+    queue_depth: np.ndarray          # pending predicts at each sample
     bucket_counts: Dict[int, int]    # bucket size -> batches served
     sync_delays: np.ndarray          # simulated network time per sync
     rounds: int                      # protocol rounds applied
-    ticks: int
+    ticks: int                       # tick events (0 under continuous)
     wall_clock: float                # simulated time at quiescence
+    launches: int = 0                # predict batches launched
+    num_shed: int = 0                # requests refused by admission
+    num_deferred: int = 0            # deferral retries priced on the clock
+    policy: str = "tick"
+    slots: int = 1
 
     @property
     def num_requests(self) -> int:
@@ -152,14 +186,49 @@ class ServeResult:
     def total_loss(self) -> float:
         return self.sim.total_loss
 
+    @property
+    def mean_latency(self) -> float:
+        return float(self.latencies.mean()) if len(self.latencies) else 0.0
+
+    @property
+    def max_latency(self) -> float:
+        return float(self.latencies.max()) if len(self.latencies) else 0.0
+
+    @property
+    def mean_queue_depth(self) -> float:
+        return (float(self.queue_depth.mean())
+                if len(self.queue_depth) else 0.0)
+
+    @property
+    def max_queue_depth(self) -> int:
+        return int(self.queue_depth.max()) if len(self.queue_depth) else 0
+
     def latency_percentiles(
             self, qs: Sequence[float] = (50.0, 90.0, 99.0),
     ) -> Dict[str, float]:
-        """{"p50": ..., "p90": ..., "p99": ...} over served requests."""
+        """{"p50": ..., "p90": ..., "p99": ...} over served requests.
+        Well-defined on degenerate runs: zero served requests gives
+        0.0 everywhere (nothing waited), one request gives its own
+        latency at every percentile — never NaN."""
         if not len(self.latencies):
-            return {f"p{q:g}": math.nan for q in qs}
+            return {f"p{q:g}": 0.0 for q in qs}
         return {f"p{q:g}": float(np.percentile(self.latencies, q))
                 for q in qs}
+
+    def summary(self) -> Dict[str, float]:
+        """Flat NaN-free scalar summary of the serving face (bench
+        rows and reports are built from this)."""
+        out = {"requests": float(self.num_requests),
+               "rounds": float(self.rounds),
+               "launches": float(self.launches),
+               "shed": float(self.num_shed),
+               "deferred": float(self.num_deferred),
+               "mean_latency": self.mean_latency,
+               "max_latency": self.max_latency,
+               "mean_queue_depth": self.mean_queue_depth,
+               "wall_clock": float(self.wall_clock)}
+        out.update(self.latency_percentiles())
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +252,43 @@ def _predict_op(sub: Substrate):
 
 
 # ---------------------------------------------------------------------------
+# Per-tenant protocol state
+# ---------------------------------------------------------------------------
+
+
+class _Tenant:
+    """One (substrate, protocol) instance behind the shared engine:
+    its own carry, feedback queues, per-round series and placed-model
+    cache.  Never touches the scheduler."""
+
+    def __init__(self, tid: int, sub: Substrate, pcfg: ProtocolConfig,
+                 m: int, topology: str, record_divergence: bool,
+                 name: Optional[str] = None):
+        self.tid = tid
+        self.name = name or f"tenant{tid}"
+        self.sub = sub
+        self.pcfg = pcfg
+        self.record_divergence = bool(record_divergence)
+        self.params = params_of(pcfg)
+        self.round_op = _round_op(sub, pcfg.kind, self.record_divergence,
+                                  topology)
+        self.predict_op = _predict_op(sub)
+        self.carry = init_protocol_carry(sub, m)
+        self.t = 0
+        self.fb: List[Deque[Tuple[np.ndarray, float]]] = [
+            deque() for _ in range(m)]
+        self.served: List[PredictRequest] = []
+        self.placed_models = None
+        self.loss_rows: List[np.ndarray] = []
+        self.err_rows: List[np.ndarray] = []
+        self.byte_rows: List[int] = []
+        self.div_rows: List[np.floating] = []
+        self.flag_rows: List[bool] = []
+        self.eps_rows: List[np.floating] = []
+        self.sync_delays: List[float] = []
+
+
+# ---------------------------------------------------------------------------
 # The engine
 # ---------------------------------------------------------------------------
 
@@ -193,29 +299,40 @@ class KernelServingEngine:
     Usage (see also :func:`serve_stream` and
     examples/serve_quickstart.py)::
 
-        eng = KernelServingEngine(sub, pcfg, m=4)
+        eng = KernelServingEngine(sub, pcfg, m=4, policy="continuous",
+                                  slots=2, slo=0.25, max_queue=256)
         eng.submit(x, learner=2, at=0.7)          # predict request
         eng.feedback(x, y, learner=2, at=1.1)     # labeled example
         res = eng.serve()                         # run clock to drain
         res.latency_percentiles(), res.sim.total_bytes
 
     ``submit`` / ``feedback`` schedule *arrivals* on the event clock;
-    nothing computes until :meth:`serve` runs the clock.  Ticks fire on
-    a fixed ``tick_interval`` grid, but only while there is work — the
-    clock drains to quiescence exactly like the async runtime's.
+    nothing computes until :meth:`serve` runs the clock.  The batch
+    policy decides when admitted requests launch (``policy=``
+    "continuous" or "tick"); the clock drains to quiescence exactly
+    like the async runtime's.
 
     Constructor keywords mirror ``engine.run``'s resolver semantics
     (``substrate_of``): ``sync_budget`` / ``compress_method`` /
     ``backend`` are ``None`` sentinels meaning "keep the substrate's
-    own configuration".
+    own configuration".  Scheduling keywords (`serving/scheduler.py`):
+
+    - ``policy``: "tick" (grid micro-batching, the PR 5 baseline) or
+      "continuous" (slotted continuous batching);
+    - ``slots``: in-flight predict lanes per shard;
+    - ``max_queue`` / ``overload`` / ``defer_interval``: admission
+      control — bounded pending queue, "shed" or "defer" over it;
+    - ``slo`` / ``max_wait``: the latency target; continuous batching
+      spends at most the budget's slack waiting for batches to fill.
 
     ``tracer`` (a ``repro.telemetry.Tracer``, DESIGN.md Sec. 11)
     records the request lifecycle on the engine's simulated clock:
-    an ``enqueue`` instant at arrival, a ``request`` span
-    arrival -> reply, per-batch ``predict/bucket<B>`` spans, queue-depth
-    and bucket-occupancy counter tracks, per-round protocol instants
-    and ``sync/transfer`` spans carrying their Sec. 3 bytes.  No
-    tracer, no cost — and never any change to the jitted step.
+    an ``enqueue`` instant at arrival, ``shed``/``defer`` admission
+    instants, a ``request`` span arrival -> reply, per-batch
+    ``predict/bucket<B>`` spans, queue-depth / bucket-occupancy /
+    in-flight counter tracks, per-round protocol instants and
+    ``sync/transfer`` spans carrying their Sec. 3 bytes.  No tracer,
+    no cost — and never any change to the jitted step.
     """
 
     def __init__(
@@ -235,6 +352,13 @@ class KernelServingEngine:
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         record_divergence: bool = False,
         tracer: Optional[Tracer] = None,
+        policy: str = "tick",
+        slots: int = 1,
+        max_queue: Optional[int] = None,
+        overload: str = "shed",
+        defer_interval: Optional[float] = None,
+        slo: Optional[float] = None,
+        max_wait: Optional[float] = None,
     ):
         if m < 1:
             raise ValueError(f"need at least one learner, got m={m}")
@@ -242,27 +366,18 @@ class KernelServingEngine:
             raise ValueError(f"tick_interval must be > 0, got {tick_interval}")
         if predict_cost < 0:
             raise ValueError(f"predict_cost must be >= 0, got {predict_cost}")
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, "
+                             f"got {policy!r}")
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         if not self.buckets or self.buckets[0] < 1:
             raise ValueError(f"buckets must be positive ints, got {buckets}")
 
-        self.sub = substrate_mod.substrate_of(
-            learner, sync_budget=sync_budget,
-            compress_method=compress_method, backend=backend)
-        self.pcfg = pcfg
         self.m = int(m)
-        self.d = int(self.sub.input_dim)
+        self.topology = topology
         self.tick_interval = float(tick_interval)
         self.predict_cost = float(predict_cost)
         self.record_divergence = bool(record_divergence)
-
-        # protocol round: the scan engine's own step, jitted standalone
-        self._params = params_of(pcfg)
-        self._round = _round_op(self.sub, pcfg.kind,
-                                self.record_divergence, topology)
-        self._predict = _predict_op(self.sub)
-        self._carry = init_protocol_carry(self.sub, self.m)
-        self._t = 0
 
         # home-shard routing (mesh mode)
         if mesh is not None:
@@ -273,10 +388,12 @@ class KernelServingEngine:
                     f"{self.m} learners cannot shard evenly over "
                     f"{n_shards} devices (mesh axes {axes})")
             self._per_shard = self.m // n_shards
+            self._n_shards = n_shards
             lead = axes if len(axes) > 1 else axes[0]
             self._model_sharding = NamedSharding(mesh, P(lead))
         else:
             self._per_shard = None
+            self._n_shards = 1
             self._model_sharding = None
 
         # the seeded timeline (shared clock model with repro.runtime);
@@ -286,32 +403,85 @@ class KernelServingEngine:
         self.clock = Clock(tracer=tracer)
         self.system = SystemModel(sys_cfg or SystemConfig(), self.m)
 
-        self._uid = itertools.count()
-        self._pending: List[PredictRequest] = []
-        self._fb: List[Deque[Tuple[np.ndarray, float]]] = [
-            deque() for _ in range(self.m)]
-        self._served: List[PredictRequest] = []
-        self._tick_scheduled = False
-        self._ticks = 0
-        # the predict server is ONE simulated compute resource: a
-        # tick's batches start no earlier than the previous tick's
-        # batches finished, so predict_cost is never double-booked
-        self._busy_until = 0.0
-        # stacked models placed for predict, rebuilt only after a
-        # protocol round mutates the carry
-        self._placed_models = None
+        # tenant 0 is the constructor's (learner, pcfg)
+        self._tenants: List[_Tenant] = []
+        self.add_tenant(learner, pcfg, sync_budget=sync_budget,
+                        compress_method=compress_method, backend=backend,
+                        record_divergence=record_divergence)
 
-        # per-round protocol series (stacked at result() time exactly
-        # like engine.run's host-side post-processing)
-        self._loss_rows: List[np.ndarray] = []
-        self._err_rows: List[np.ndarray] = []
-        self._byte_rows: List[int] = []
-        self._div_rows: List[np.floating] = []
-        self._flag_rows: List[bool] = []
-        self._eps_rows: List[np.floating] = []
-        self._queue_depth: List[int] = []
-        self._sync_delays: List[float] = []
-        self._bucket_counts: Counter = Counter()
+        # the predict path: slot pools + batch policy + admission
+        self.scheduler: SlotScheduler = make_scheduler(
+            policy,
+            clock=self.clock,
+            predict_fn=self._predict_chunk,
+            shard_of=self.home_shard,
+            n_shards=self._n_shards,
+            buckets=self.buckets,
+            predict_cost=self.predict_cost,
+            slots=slots,
+            max_queue=max_queue,
+            overload=overload,
+            defer_interval=defer_interval,
+            tick_interval=self.tick_interval,
+            slo=slo,
+            max_wait=max_wait,
+            tracer=tracer,
+        )
+        self.policy = policy
+        self._uid = itertools.count()
+
+    # -- tenants -------------------------------------------------------------
+
+    @property
+    def sub(self) -> Substrate:
+        """Tenant 0's substrate (the single-tenant engine's face)."""
+        return self._tenants[0].sub
+
+    @property
+    def pcfg(self) -> ProtocolConfig:
+        return self._tenants[0].pcfg
+
+    @property
+    def d(self) -> int:
+        return int(self._tenants[0].sub.input_dim)
+
+    @property
+    def num_tenants(self) -> int:
+        return len(self._tenants)
+
+    def add_tenant(
+        self,
+        learner,
+        pcfg: ProtocolConfig,
+        *,
+        sync_budget: Optional[int] = None,
+        compress_method: Optional[str] = None,
+        backend: Optional[str] = None,
+        record_divergence: Optional[bool] = None,
+        name: Optional[str] = None,
+    ) -> int:
+        """Register another protocol instance over the same m learners
+        behind the shared slot pool; returns its tenant id.  All
+        tenants must share the input dimension (requests are routed by
+        (tenant, learner) and carry one ``x`` shape)."""
+        sub = substrate_mod.substrate_of(
+            learner, sync_budget=sync_budget,
+            compress_method=compress_method, backend=backend)
+        if self._tenants and int(sub.input_dim) != self.d:
+            raise ValueError(
+                f"tenant input_dim {sub.input_dim} != engine d {self.d}")
+        rec = (self.record_divergence if record_divergence is None
+               else bool(record_divergence))
+        ten = _Tenant(len(self._tenants), sub, pcfg, self.m, self.topology,
+                      rec, name=name)
+        self._tenants.append(ten)
+        return ten.tid
+
+    def _tenant(self, tenant: int) -> _Tenant:
+        if not (0 <= tenant < len(self._tenants)):
+            raise ValueError(f"tenant {tenant} not in "
+                             f"[0, {len(self._tenants)})")
+        return self._tenants[tenant]
 
     # -- request ingress -----------------------------------------------------
 
@@ -335,190 +505,127 @@ class KernelServingEngine:
         return x
 
     def submit(self, x, *, learner: int = 0, at: float = 0.0,
-               ) -> PredictRequest:
+               tenant: int = 0) -> PredictRequest:
         """Schedule a predict request arriving at simulated time ``at``;
-        it is answered (``yhat`` / ``done_time`` filled) by the next
-        tick after arrival."""
+        the batch policy answers it (``yhat`` / ``done_time`` filled)
+        — or admission control sheds it (``shed`` set, never served)."""
         x = self._check_ingress(x, learner, at)
+        self._tenant(tenant)
         req = PredictRequest(uid=next(self._uid), learner=int(learner),
-                             x=x, arrival=float(at))
+                             x=x, arrival=float(at), tenant=int(tenant))
         self.clock.schedule(at - self.clock.now,
                             lambda: self._arrive_predict(req))
         return req
 
-    def feedback(self, x, y, *, learner: int, at: float = 0.0) -> None:
+    def feedback(self, x, y, *, learner: int, at: float = 0.0,
+                 tenant: int = 0) -> None:
         """Schedule a labeled example arriving at simulated time ``at``.
         Examples queue per learner FIFO; each time every learner has
-        one queued, the next tick applies one full protocol round (the
-        lockstep round structure the parity contract needs)."""
+        one queued, one full protocol round applies immediately (the
+        lockstep round structure the parity contract needs).  Feedback
+        is never admission-controlled: the learning stream cannot be
+        shed without changing the protocol view."""
         x = self._check_ingress(x, learner, at)
+        self._tenant(tenant)
         item = (x, float(y))
         self.clock.schedule(
             at - self.clock.now,
-            lambda: self._arrive_feedback(int(learner), item))
+            lambda: self._arrive_feedback(int(learner), item, int(tenant)))
 
     # -- event handlers ------------------------------------------------------
 
     def _arrive_predict(self, req: PredictRequest) -> None:
-        self._pending.append(req)
         if self.tracer is not None:
             self.tracer.instant(
                 "enqueue", self.clock.now, pid=PID_SERVING,
                 tid=self.tracer.tid(PID_SERVING, "requests"),
-                args={"uid": req.uid, "learner": req.learner})
-        self._ensure_tick()
+                args={"uid": req.uid, "learner": req.learner,
+                      "tenant": req.tenant})
+        self.scheduler.submit(req)
 
     def _arrive_feedback(self, learner: int,
-                         item: Tuple[np.ndarray, float]) -> None:
-        self._fb[learner].append(item)
-        if all(self._fb):          # a full round is ready
-            self._ensure_tick()
+                         item: Tuple[np.ndarray, float],
+                         tenant: int) -> None:
+        ten = self._tenants[tenant]
+        ten.fb[learner].append(item)
+        while all(ten.fb):          # full rounds apply immediately
+            xs = np.stack([ten.fb[i][0][0] for i in range(self.m)])
+            ys = np.asarray([ten.fb[i][0][1] for i in range(self.m)],
+                            np.float32)
+            for q in ten.fb:
+                q.popleft()
+            self._apply_round(ten, xs, ys)
 
-    def _ensure_tick(self) -> None:
-        if self._tick_scheduled:
-            return
-        self._tick_scheduled = True
-        # next grid point strictly after now
-        k = math.floor(self.clock.now / self.tick_interval + 1e-9) + 1
-        self.clock.schedule(k * self.tick_interval - self.clock.now,
-                            self._tick)
+    # -- the predict path (called by the scheduler) --------------------------
 
-    # -- the tick ------------------------------------------------------------
-
-    def _route(self) -> List[List[PredictRequest]]:
-        """Pending requests grouped by home shard (arrival order kept
-        within each group); one group when unmeshed."""
-        if self._per_shard is None:
-            return [self._pending] if self._pending else []
-        groups: Dict[int, List[PredictRequest]] = {}
-        for r in self._pending:
-            groups.setdefault(self.home_shard(r.learner), []).append(r)
-        return [groups[s] for s in sorted(groups)]
-
-    def _bucket_of(self, n: int) -> int:
-        for b in self.buckets:
-            if b >= n:
-                return b
-        raise AssertionError(      # _tick chunks by buckets[-1] first
-            f"chunk of {n} exceeds the largest bucket {self.buckets[-1]}")
-
-    def _models_for_predict(self):
-        if self._placed_models is None:
-            models = self.sub.models_of(self._carry[0])
+    def _models_for_predict(self, ten: _Tenant):
+        if ten.placed_models is None:
+            models = ten.sub.models_of(ten.carry[0])
             if self._model_sharding is not None:
                 models = jax.device_put(models, self._model_sharding)
-            self._placed_models = models
-        return self._placed_models
+            ten.placed_models = models
+        return ten.placed_models
 
-    def _tick(self) -> None:
-        self._tick_scheduled = False
-        self._ticks += 1
-        self._queue_depth.append(len(self._pending))
-        tracer = self.tracer
-        if tracer is not None:
-            # queue-depth counter track, sampled at every tick start
-            tracer.counter("serve/queue_depth", self.clock.now,
-                           {"pending": len(self._pending)},
-                           pid=PID_SERVING)
-        cursor = max(self.clock.now, self._busy_until)
+    def _predict_chunk(self, chunk: List[PredictRequest],
+                       bucket: int) -> np.ndarray:
+        """One padded-batch predict for a (tenant, shard) chunk — the
+        scheduler's ``predict_fn``.  Padding rows reuse the chunk's
+        first learner id so the gather never reaches outside the home
+        shard."""
+        ten = self._tenants[chunk[0].tenant]
+        models = self._models_for_predict(ten)
+        d = int(ten.sub.input_dim)
+        lids = np.full((bucket,), chunk[0].learner, np.int32)
+        Xb = np.zeros((bucket, d), np.float32)
+        for i, r in enumerate(chunk):
+            lids[i] = r.learner
+            Xb[i] = r.x
+        yh = np.asarray(ten.predict_op(
+            models, jnp.asarray(lids), jnp.asarray(Xb)))
+        ten.served.extend(chunk)
+        return yh
 
-        if self._pending:
-            models = self._models_for_predict()
-            max_b = self.buckets[-1]
-            for group in self._route():
-                for lo in range(0, len(group), max_b):
-                    chunk = group[lo:lo + max_b]
-                    bucket = self._bucket_of(len(chunk))
-                    # padding rows reuse the chunk's first learner id so
-                    # the gather never reaches outside the home shard
-                    lids = np.full((bucket,), chunk[0].learner, np.int32)
-                    Xb = np.zeros((bucket, self.d), np.float32)
-                    for i, r in enumerate(chunk):
-                        lids[i] = r.learner
-                        Xb[i] = r.x
-                    yh = np.asarray(self._predict(
-                        models, jnp.asarray(lids), jnp.asarray(Xb)))
-                    batch_start = cursor
-                    cursor += self.predict_cost
-                    self._bucket_counts[bucket] += 1
-                    for i, r in enumerate(chunk):
-                        r.yhat = float(yh[i])
-                        r.done_time = cursor
-                    self._served.extend(chunk)
-                    if tracer is not None:
-                        tid = tracer.tid(PID_SERVING, "predict")
-                        tracer.complete(
-                            f"predict/bucket{bucket}", batch_start,
-                            self.predict_cost, pid=PID_SERVING, tid=tid,
-                            args={"bucket": bucket, "filled": len(chunk),
-                                  "shard": self.home_shard(
-                                      chunk[0].learner)})
-                        tracer.counter(
-                            "serve/bucket_occupancy", batch_start,
-                            {"filled": len(chunk), "bucket": bucket},
-                            pid=PID_SERVING)
-                        # request lifecycle: enqueue instant at arrival
-                        # (recorded then) -> this span closes the loop
-                        rtid = tracer.tid(PID_SERVING, "requests")
-                        for r in chunk:
-                            tracer.complete(
-                                "request", r.arrival,
-                                r.done_time - r.arrival,
-                                pid=PID_SERVING, tid=rtid,
-                                args={"uid": r.uid, "learner": r.learner,
-                                      "bucket": bucket})
-            self._pending.clear()
-            self._busy_until = cursor
-            if cursor > self.clock.now:
-                # completion lands on the timeline so wall_clock and
-                # done_time can never disagree
-                self.clock.schedule(cursor - self.clock.now, lambda: None)
+    # -- protocol rounds -----------------------------------------------------
 
-        while all(self._fb):
-            xs = np.stack([self._fb[i][0][0] for i in range(self.m)])
-            ys = np.asarray([self._fb[i][0][1] for i in range(self.m)],
-                            np.float32)
-            for q in self._fb:
-                q.popleft()
-            self._apply_round(xs, ys)
-
-    def _apply_round(self, x_row: np.ndarray, y_row: np.ndarray) -> None:
+    def _apply_round(self, ten: _Tenant, x_row: np.ndarray,
+                     y_row: np.ndarray) -> None:
         """One protocol round through the scan engine's step (the
         parity-critical path — see the module docstring)."""
-        self.sub.validate(self._t + 1, self.m, self.d)   # sv_id capacity
+        ten.sub.validate(ten.t + 1, self.m, self.d)   # sv_id capacity
         xs = (jnp.asarray(x_row), jnp.asarray(y_row),
-              jnp.asarray(self._t, jnp.int32))
-        self._carry, outs = self._round(self._params, self._carry, xs)
-        self._placed_models = None      # next tick re-places the models
+              jnp.asarray(ten.t, jnp.int32))
+        ten.carry, outs = ten.round_op(ten.params, ten.carry, xs)
+        ten.placed_models = None      # next launch re-places the models
         loss, err, nbytes, div, flag, eps = outs
-        self._loss_rows.append(np.asarray(loss))
-        self._err_rows.append(np.asarray(err))
-        self._byte_rows.append(int(nbytes))
-        self._div_rows.append(np.asarray(div))
-        self._eps_rows.append(np.asarray(eps))
+        ten.loss_rows.append(np.asarray(loss))
+        ten.err_rows.append(np.asarray(err))
+        ten.byte_rows.append(int(nbytes))
+        ten.div_rows.append(np.asarray(div))
+        ten.eps_rows.append(np.asarray(eps))
         fired = bool(flag)
-        self._flag_rows.append(fired)
-        self._t += 1
+        ten.flag_rows.append(fired)
+        ten.t += 1
         if self.tracer is not None:
             self.tracer.instant(
                 "round", self.clock.now, pid=PID_SERVING,
                 tid=self.tracer.tid(PID_SERVING, "protocol"),
-                args={"t": self._t - 1, "nbytes": int(nbytes),
-                      "sync": fired})
+                args={"t": ten.t - 1, "tenant": ten.tid,
+                      "nbytes": int(nbytes), "sync": fired})
         if fired:
             # background sync: price the Sec. 3 bytes into simulated
             # network time (same seeded draw order as the runtime's
             # transport) and let it complete as a clock event — it
-            # never blocks the tick loop, but wall_clock sees it.
+            # never blocks serving, but wall_clock sees it.
             delay = self.system.draw_latency(int(nbytes))
-            self._sync_delays.append(delay)
+            ten.sync_delays.append(delay)
             if self.tracer is not None:
                 # the sync transfer span, carrying its Sec. 3 bytes
                 self.tracer.complete(
                     "sync/transfer", self.clock.now, delay,
                     pid=PID_SERVING,
                     tid=self.tracer.tid(PID_SERVING, "protocol"),
-                    args={"t": self._t - 1, "nbytes": int(nbytes)})
+                    args={"t": ten.t - 1, "tenant": ten.tid,
+                          "nbytes": int(nbytes)})
             if delay > 0:
                 self.clock.schedule(delay, lambda: None)
 
@@ -526,42 +633,54 @@ class KernelServingEngine:
 
     @property
     def rounds_applied(self) -> int:
-        return self._t
+        return self._tenants[0].t
 
-    def serve(self) -> ServeResult:
-        """Run the event clock to quiescence and package the results."""
+    def serve(self, tenant: int = 0) -> ServeResult:
+        """Run the event clock to quiescence and package the results
+        (of ``tenant``; see :meth:`results` for all tenants)."""
         self.clock.run()
-        return self.result()
+        return self.result(tenant)
 
-    def result(self) -> ServeResult:
+    def results(self) -> List[ServeResult]:
+        """Per-tenant snapshots, tenant order."""
+        return [self.result(t) for t in range(len(self._tenants))]
+
+    def result(self, tenant: int = 0) -> ServeResult:
         """Snapshot of everything served/learned so far.  The ``sim``
         field is assembled by ``engine.assemble_sim_result`` — the SAME
         host-side post-processing ``engine.run`` uses (per-learner
         stacking, fixed-order numpy sums, float64/int64 accumulation) —
         which is the second half of the bit-for-bit parity contract."""
-        if self._t:
-            loss = np.stack(self._loss_rows)          # (T, m) float32
-            err = np.stack(self._err_rows)
-            div = np.stack(self._div_rows)
-            eps = np.stack(self._eps_rows)
+        ten = self._tenant(tenant)
+        if ten.t:
+            loss = np.stack(ten.loss_rows)            # (T, m) float32
+            err = np.stack(ten.err_rows)
+            div = np.stack(ten.div_rows)
+            eps = np.stack(ten.eps_rows)
         else:
             loss = np.zeros((0, self.m), np.float32)
             err = np.zeros((0, self.m), np.float32)
             div = np.zeros((0,), np.float32)
             eps = np.zeros((0,), np.float32)
         sim = assemble_sim_result(
-            self.sub, self.record_divergence, loss, err,
-            np.asarray(self._byte_rows, np.int64), div,
-            np.asarray(self._flag_rows, bool), eps)
+            ten.sub, ten.record_divergence, loss, err,
+            np.asarray(ten.byte_rows, np.int64), div,
+            np.asarray(ten.flag_rows, bool), eps)
+        sched = self.scheduler
         return ServeResult(
             sim=sim,
-            latencies=np.asarray([r.latency for r in self._served]),
-            queue_depth=np.asarray(self._queue_depth, np.int64),
-            bucket_counts=dict(self._bucket_counts),
-            sync_delays=np.asarray(self._sync_delays),
-            rounds=self._t,
-            ticks=self._ticks,
+            latencies=np.asarray([r.latency for r in ten.served]),
+            queue_depth=np.asarray(sched.queue_depth, np.int64),
+            bucket_counts=dict(sched.bucket_counts),
+            sync_delays=np.asarray(ten.sync_delays),
+            rounds=ten.t,
+            ticks=sched.ticks,
             wall_clock=self.clock.now,
+            launches=sched.launches,
+            num_shed=sched.num_shed,
+            num_deferred=sched.num_deferred,
+            policy=sched.POLICY,
+            slots=sched.slots,
         )
 
 
@@ -578,6 +697,7 @@ def serve_stream(
     *,
     queries_per_round: float = 0.0,
     query_seed: int = 0,
+    arrivals: Optional[ArrivalProcess] = None,
     **engine_kw,
 ) -> ServeResult:
     """Replay a (T, m, d) protocol stream through the serving engine.
@@ -590,12 +710,22 @@ def serve_stream(
     (compute times are positive), which preserves the stream order the
     parity contract needs.
 
-    ``queries_per_round * T`` predict-only requests (seeded uniform
-    arrivals over the feedback horizon, home learner uniform, inputs
-    resampled from the stream) exercise the micro-batching path; they
-    read model state and never touch it, so the protocol view stays
+    Query traffic rides along to exercise the predict path; it reads
+    model state and never touches it, so the protocol view stays
     bit-identical to ``engine.run(learner, pcfg, X, Y)`` at any query
-    rate.  ``engine_kw`` forwards to :class:`KernelServingEngine`.
+    rate, under any batch policy and any admission outcome.  Two ways
+    to generate it:
+
+    - ``queries_per_round * T`` requests at seeded *uniform* arrival
+      times over the feedback horizon (the PR 5 default, kept for
+      comparability);
+    - ``arrivals=`` an :class:`repro.serving.arrivals.ArrivalProcess`
+      (Poisson / bursty / diurnal), whose seeded ``times(horizon)``
+      replace the uniform draws; ``queries_per_round`` is ignored.
+
+    Home learners and inputs are resampled from the stream under
+    ``query_seed`` either way.  ``engine_kw`` forwards to
+    :class:`KernelServingEngine` (policy, slots, admission, SLO, ...).
     """
     X = np.asarray(X, np.float32)
     Y = np.asarray(Y, np.float32)
@@ -607,13 +737,16 @@ def serve_stream(
         for i in range(m):
             eng.feedback(X[t, i], Y[t, i], learner=i,
                          at=float(arrive[t, i]))
-    n_q = int(round(queries_per_round * T))
-    if n_q:
-        rng = np.random.default_rng(query_seed)
-        horizon = float(arrive.max())
-        times = np.sort(rng.uniform(0.0, horizon, size=n_q))
-        for tq in times:
-            lid = int(rng.integers(m))
-            x = X[int(rng.integers(T)), lid]
-            eng.submit(x, learner=lid, at=float(tq))
+    horizon = float(arrive.max())
+    rng = np.random.default_rng(query_seed)
+    if arrivals is not None:
+        times = arrivals.times(horizon)
+    else:
+        n_q = int(round(queries_per_round * T))
+        times = (np.sort(rng.uniform(0.0, horizon, size=n_q))
+                 if n_q else np.zeros((0,)))
+    for tq in times:
+        lid = int(rng.integers(m))
+        x = X[int(rng.integers(T)), lid]
+        eng.submit(x, learner=lid, at=float(tq))
     return eng.serve()

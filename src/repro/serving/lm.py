@@ -38,7 +38,7 @@ class Request:
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    latency_s: float = 0.0
+    latency_s: float = 0.0   # batch start -> THIS request's completion
 
 
 class LMServingEngine:
@@ -87,8 +87,15 @@ class LMServingEngine:
                     if r.uid >= 0 and not r.done and step < r.max_new_tokens:
                         t = int(next_tok[i, 0])
                         r.output.append(t)
-                        if r.eos_token is not None and t == r.eos_token:
+                        if ((r.eos_token is not None and t == r.eos_token)
+                                or len(r.output) >= r.max_new_tokens):
                             r.done = True
+                            r.latency_s = time.time() - t0
+                # early exit: once every live sequence has finished
+                # (eos or its own token budget), stop decoding instead
+                # of burning steps to the batch-wide max.
+                if all(r.done or r.uid < 0 for r in batch_reqs):
+                    break
                 pos = jnp.asarray(S + step, jnp.int32)
                 logits, caches = self._decode(self.params, caches, next_tok, pos)
                 next_tok = jnp.argmax(
@@ -97,7 +104,8 @@ class LMServingEngine:
             dt = time.time() - t0
             for r in batch_reqs:
                 if r.uid >= 0:
-                    r.done = True
-                    r.latency_s = dt
+                    if not r.done:            # max_new_tokens == 0 edge
+                        r.done = True
+                        r.latency_s = dt
                     finished.append(r)
         return finished

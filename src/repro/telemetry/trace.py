@@ -33,6 +33,14 @@ with the standard phases — ``X`` (complete span with ``dur``), ``C``
 :data:`PID_NETWORK`, :data:`PID_SERVING`); ``tid`` lanes within a pid
 are handed out by :meth:`Tracer.tid` in first-use order (deterministic
 because event order is).
+
+The serving engine (DESIGN.md Secs. 10, 13) uses four PID_SERVING
+lanes: ``requests`` (enqueue instants + per-request spans),
+``predict`` (padded-batch launch spans, one per ``predict/bucketN``),
+``protocol`` (round instants + sync/transfer spans), and
+``admission`` (shed/defer instants from the bounded-queue admission
+controller) — plus the ``serve/queue_depth``, ``serve/bucket_occupancy``
+and ``serve/slots_in_flight`` counter tracks.
 """
 from __future__ import annotations
 
@@ -126,12 +134,15 @@ class Tracer:
         self._events.append(ev)
 
     def counter(self, name: str, ts: float, values: Dict[str, float], *,
-                pid: int = PID_RUNTIME) -> None:
+                pid: int = PID_RUNTIME, tid: int = 0) -> None:
         """One sample on a counter track (phase ``C``); ``values`` maps
-        series name -> numeric sample, all plotted on one track."""
+        series name -> numeric sample, all plotted on one track.
+        ``tid`` places the track on a named lane (``Tracer.tid``) so
+        per-lane counters — e.g. the serving scheduler's per-shard
+        slot occupancy — group under their lane instead of lane 0."""
         self._ensure_pid(pid)
         self._events.append({
-            "ph": "C", "name": name, "pid": pid, "tid": 0,
+            "ph": "C", "name": name, "pid": pid, "tid": tid,
             "ts": ts * TICKS_PER_UNIT, "args": dict(values)})
 
     # -- export --------------------------------------------------------------

@@ -1,0 +1,171 @@
+"""Arrival-process determinism suite (DESIGN.md Sec. 13).
+
+The serving load generators (`repro.serving.arrivals`) obey the same
+determinism contract as every other seeded quantity in the repo: a
+process's ``times(horizon)`` is a pure function of (config, seed,
+horizon) — byte-identical across calls AND across Python processes
+(the per-class RNG stream tags are fixed integers, never
+PYTHONHASHSEED-randomized string hashes) — and a serving run fed by
+one produces a byte-identical Chrome trace under seed, extending the
+PR 6 trace-determinism test to the continuous-batching path.
+"""
+import hashlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.learners import LearnerConfig
+from repro.core.protocol import ProtocolConfig
+from repro.data import susy_stream
+from repro.serving import (ARRIVAL_KINDS, BurstyArrivals, DiurnalArrivals,
+                           PoissonArrivals, make_arrivals, serve_stream)
+from repro.telemetry.trace import Tracer
+
+HORIZON = 50.0
+RATE = 4.0
+
+
+def _times(kind, seed=3, rate=RATE, horizon=HORIZON):
+    return make_arrivals(kind, rate, seed=seed).times(horizon)
+
+
+# ---------------------------------------------------------------------------
+# Generator determinism
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ARRIVAL_KINDS)
+def test_arrivals_byte_identical_under_seed(kind):
+    a, b = _times(kind), _times(kind)
+    assert a.dtype == np.float64
+    assert a.tobytes() == b.tobytes()        # byte-identical, not approx
+    assert _times(kind, seed=4).tobytes() != a.tobytes()
+
+
+@pytest.mark.parametrize("kind", ARRIVAL_KINDS)
+def test_arrivals_sorted_and_in_range(kind):
+    ts = _times(kind)
+    assert len(ts) > 0
+    assert (np.diff(ts) >= 0).all()
+    assert ts[0] >= 0.0 and ts[-1] < HORIZON
+
+
+def test_kinds_draw_from_distinct_streams():
+    """Same (rate, seed), different kind => different draws: the
+    per-class stream tag actually separates the generators."""
+    blobs = {kind: _times(kind).tobytes() for kind in ARRIVAL_KINDS}
+    assert len(set(blobs.values())) == len(ARRIVAL_KINDS)
+
+
+def test_arrivals_byte_identical_across_processes():
+    """The regression the fixed _KIND_TAG constants prevent: a
+    hash(classname)-based stream tag varies with PYTHONHASHSEED, which
+    Python randomizes per process.  A fresh interpreter must reproduce
+    the parent's draws exactly."""
+    digests = {kind: hashlib.sha256(_times(kind).tobytes()).hexdigest()
+               for kind in ARRIVAL_KINDS}
+    script = textwrap.dedent(f"""
+        import hashlib
+        from repro.serving import make_arrivals
+        for kind in {list(ARRIVAL_KINDS)!r}:
+            ts = make_arrivals(kind, {RATE}, seed=3).times({HORIZON})
+            print(kind, hashlib.sha256(ts.tobytes()).hexdigest())
+    """)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True,
+                         env={"PYTHONPATH": "src", "PYTHONHASHSEED": "99"})
+    assert out.returncode == 0, out.stderr
+    for line in out.stdout.strip().splitlines():
+        kind, digest = line.split()
+        assert digests[kind] == digest, kind
+
+
+# ---------------------------------------------------------------------------
+# Statistical sanity (deterministic seeds => plain asserts, no flake)
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_count_near_mean():
+    ts = PoissonArrivals(rate=RATE, seed=0).times(500.0)
+    mean = RATE * 500.0
+    assert abs(len(ts) - mean) < 5 * np.sqrt(mean)
+
+
+def test_bursty_long_run_rate_and_duty():
+    p = BurstyArrivals(rate=RATE, seed=0, mean_on=1.0, mean_off=3.0)
+    assert p.duty == pytest.approx(0.25)
+    assert p.burst_rate == pytest.approx(4 * RATE)   # 1/duty inflation
+    ts = p.times(2000.0)
+    assert len(ts) / 2000.0 == pytest.approx(p.mean_rate, rel=0.15)
+    # bursty really is burstier than Poisson: higher variance of
+    # per-unit-interval counts at the same mean rate
+    pois = PoissonArrivals(rate=RATE, seed=0).times(2000.0)
+    var_b = np.var(np.histogram(ts, bins=2000, range=(0, 2000))[0])
+    var_p = np.var(np.histogram(pois, bins=2000, range=(0, 2000))[0])
+    assert var_b > 2 * var_p
+
+
+def test_diurnal_profile_and_mean():
+    p = DiurnalArrivals(rate=RATE, seed=0, trough_frac=0.2, period=20.0)
+    assert p.peak_rate == RATE
+    assert p.trough_rate == pytest.approx(0.2 * RATE)
+    assert p.mean_rate == pytest.approx(0.5 * (0.2 * RATE + RATE))
+    assert p.rate_at(0.0) == pytest.approx(p.trough_rate)
+    assert p.rate_at(10.0) == pytest.approx(p.peak_rate)
+    ts = p.times(2000.0)
+    assert len(ts) / 2000.0 == pytest.approx(p.mean_rate, rel=0.15)
+    # more arrivals near the crest than near the trough
+    phase = np.mod(ts, 20.0)
+    crest = ((phase > 5.0) & (phase < 15.0)).sum()
+    trough = len(ts) - crest
+    assert crest > 1.5 * trough
+
+
+def test_arrivals_validation():
+    with pytest.raises(ValueError):
+        PoissonArrivals(rate=0.0)
+    with pytest.raises(ValueError):
+        BurstyArrivals(rate=1.0, mean_on=0.0)
+    with pytest.raises(ValueError):
+        DiurnalArrivals(rate=1.0, trough_frac=1.5)
+    with pytest.raises(ValueError):
+        DiurnalArrivals(rate=1.0, period=0.0)
+    with pytest.raises(ValueError):
+        make_arrivals("uniform", 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Trace byte-identity through the serving engine (extends PR 6)
+# ---------------------------------------------------------------------------
+
+T, M, D = 30, 4, 6
+
+
+def _traced_run(kind, policy, seed=3):
+    X, Y = susy_stream(T=T, m=M, d=D, seed=1)
+    lcfg = LearnerConfig(algo="linear_sgd", loss="hinge", eta=0.1,
+                         lam=0.001, dim=D)
+    tr = Tracer()
+    res = serve_stream(
+        lcfg, ProtocolConfig(kind="dynamic", delta=1.0), X, Y,
+        arrivals=make_arrivals(kind, rate=3.0, seed=seed),
+        policy=policy, slots=2, predict_cost=0.05, max_queue=8,
+        overload="shed", tracer=tr)
+    return tr, res
+
+
+@pytest.mark.parametrize("policy", ["tick", "continuous"])
+@pytest.mark.parametrize("kind", ARRIVAL_KINDS)
+def test_serving_trace_byte_identical_under_seed(kind, policy):
+    """Identical configuration => byte-identical trace JSON, for every
+    arrival model under both batch policies — scheduling decisions,
+    holds, sheds and all."""
+    t1, r1 = _traced_run(kind, policy)
+    t2, r2 = _traced_run(kind, policy)
+    assert r1.num_requests == r2.num_requests
+    assert t1.to_json() == t2.to_json()
+    t3, _ = _traced_run(kind, policy, seed=4)
+    assert t3.to_json() != t1.to_json()      # the seed actually matters

@@ -41,6 +41,37 @@ def test_clock_rejects_negative_delay():
         Clock().schedule(-1.0, lambda: None)
 
 
+def test_clock_schedule_at_preserves_exact_time():
+    """schedule_at fires at exactly the float passed in — no
+    now + (t - now) round-trip, so grid points like k * interval are
+    hit bit-exactly even at large simulated times."""
+    clock = Clock()
+    target = 1e9 + 3 * 1e-3                 # not reachable via now+(t-now)
+    fired = []
+    clock.schedule_at(target, lambda: fired.append(clock.now))
+    clock.run()
+    assert fired == [target]                # bit-exact, not approx
+    # times in the past clamp to now (fire as soon as reached)
+    clock2 = Clock()
+    clock2.schedule(1.0, lambda: clock2.schedule_at(
+        0.25, lambda: fired.append(clock2.now)))
+    clock2.run()
+    assert fired[-1] == 1.0
+
+
+def test_clock_cancel_skips_event():
+    clock = Clock()
+    seen = []
+    ev = clock.schedule(1.0, lambda: seen.append("cancelled"))
+    clock.schedule(2.0, lambda: seen.append("kept"))
+    clock.cancel(ev)
+    clock.cancel(ev)                        # double-cancel is a no-op
+    clock.run()
+    assert seen == ["kept"]
+    assert clock.events_processed == 1      # skipped events don't count
+    clock.cancel(ev)                        # cancel-after-drain: no-op
+
+
 def test_system_model_deterministic_and_straggler_count():
     cfg = SystemConfig(seed=7, compute_jitter=0.4, straggler_frac=0.5,
                        straggler_mult=3.0, base_latency=0.2,

@@ -26,8 +26,9 @@ from repro.core.rkhs import KernelSpec
 from repro.core.substrate import SVSubstrate, substrate_of
 from repro.data import susy_stream
 from repro.runtime import SystemConfig
+from repro.runtime.clock import Clock
 from repro.serving import (DEFAULT_BUCKETS, KernelServingEngine,
-                           serve_stream)
+                           TickScheduler, make_arrivals, serve_stream)
 
 T, M, D = 40, 4, 6
 
@@ -366,3 +367,266 @@ def test_mesh_routed_serving_matches_engine():
         [sys.executable, "-c", _MESH_SCRIPT], capture_output=True, text=True)
     assert out.returncode == 0, out.stderr
     assert "MESH_SERVING_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching, admission control, multi-tenancy (DESIGN.md Sec. 13)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("overload", ["none", "shed", "defer"])
+@pytest.mark.parametrize("kind", ["poisson", "bursty", "diurnal"])
+@pytest.mark.parametrize("policy", ["tick", "continuous"])
+def test_parity_under_policy_arrival_overload(policy, kind, overload):
+    """The acceptance matrix: losses bitwise-identical and Sec. 3
+    bytes integer-exact vs engine.run under EVERY scheduling policy,
+    arrival model and overload level — scheduling is a pure
+    latency/throughput knob, structurally unable to touch the
+    protocol view."""
+    pcfg = ProtocolConfig(kind="dynamic", delta=1.0)
+    X, Y = _stream()
+    res_ref = engine.run(_lcfg(), pcfg, X, Y)
+    kw = dict(policy=policy, slots=2, predict_cost=0.05,
+              arrivals=make_arrivals(kind, rate=6.0, seed=3))
+    if overload != "none":
+        # cap capacity below the offered load (one lane, batch of two,
+        # 0.5 per launch = 4 req/s < rate 6) so admission actually binds
+        kw.update(max_queue=2, overload=overload, slots=1,
+                  predict_cost=0.5, buckets=(1, 2))
+    res = serve_stream(_lcfg(), pcfg, X, Y, **kw)
+    _assert_protocol_identical(res_ref, res.sim,
+                               (policy, kind, overload))
+    if overload == "shed":
+        # the bounded queue actually bound something at this rate
+        assert res.num_shed > 0
+        assert res.num_requests + res.num_shed > 0
+    elif overload == "defer":
+        assert res.num_shed == 0
+
+
+@pytest.mark.parametrize("learner_name", ["sv", "rff"])
+def test_parity_under_overload_kernel_substrates(learner_name):
+    """Substrate spot-check of the same matrix: the kernel substrates
+    keep the contract under continuous batching with a shedding
+    queue."""
+    learner = {"sv": _kcfg(), "rff": _rspec()}[learner_name]
+    pcfg = ProtocolConfig(kind="dynamic", delta=1.0)
+    X, Y = _stream()
+    res_ref = engine.run(learner, pcfg, X, Y)
+    res = serve_stream(
+        learner, pcfg, X, Y, policy="continuous", slots=1,
+        predict_cost=0.2, max_queue=2, overload="shed",
+        arrivals=make_arrivals("bursty", rate=8.0, seed=1))
+    _assert_protocol_identical(res_ref, res.sim, learner_name)
+    assert res.num_shed > 0                   # overload actually hit
+
+
+def test_tick_grid_integer_exact_at_large_times():
+    """The tick grid is an integer index k: each tick time is ONE
+    multiply k * tick_interval, so huge horizons with tiny intervals
+    stay exactly on grid (the old float probe
+    floor(now / interval + 1e-9) + 1 drifts at this scale and can
+    even produce a tick in the past)."""
+    sch = TickScheduler(clock=Clock(), predict_fn=None,
+                        shard_of=lambda l: 0, n_shards=1, buckets=(1,),
+                        predict_cost=0.0, tick_interval=1e-3)
+    for now in [0.0, 1e-3, 0.9999999999, 123456.789, 1e9, 1e9 + 0.25e-3,
+                1e12]:
+        k = sch._next_grid_k(now)
+        t = k * sch.tick_interval
+        assert t > now, (now, k, t)
+        assert (k - 1) * sch.tick_interval <= now, (now, k)
+    # grid points are exact fixed points: the next tick after k*dt is
+    # (k+1)*dt, never a repeat or a skip
+    for k in [1, 1_000, 1_000_000_000, 10 ** 12]:
+        assert sch._next_grid_k(k * 1e-3) == k + 1
+    with pytest.raises(OverflowError):
+        sch._next_grid_k(float("inf"))
+
+
+def test_engine_serves_at_large_now_tiny_tick():
+    """End-to-end regression: a request arriving at simulated time 1e9
+    on a 1e-3 grid is served within a couple of grid intervals — the
+    float-drift failure mode (negative delay / off-grid tick) cannot
+    occur."""
+    eng = KernelServingEngine(_lcfg(), ProtocolConfig(kind="dynamic",
+                                                      delta=0.1),
+                              M, tick_interval=1e-3)
+    big = 1.0e9
+    r = eng.submit(np.zeros(D), learner=0, at=big + 0.4e-3)
+    res = eng.serve()
+    assert r.done
+    assert 0.0 <= r.latency <= 2e-3
+    assert res.ticks == 1
+
+
+def test_serve_result_empty_and_single_stats():
+    """Latency summaries are NaN-free and well-defined on degenerate
+    runs: zero served requests gives 0.0 everywhere, one request gives
+    its own latency at every percentile."""
+    pcfg = ProtocolConfig(kind="dynamic", delta=0.1)
+    eng = KernelServingEngine(_lcfg(), pcfg, M)
+    res = eng.serve()                          # nothing ever submitted
+    assert res.num_requests == 0
+    pct = res.latency_percentiles()
+    assert pct == {"p50": 0.0, "p90": 0.0, "p99": 0.0}
+    assert res.mean_latency == 0.0 and res.max_latency == 0.0
+    assert res.mean_queue_depth == 0.0
+    summary = res.summary()
+    assert all(np.isfinite(v) for v in summary.values()), summary
+
+    eng2 = KernelServingEngine(_lcfg(), pcfg, M, tick_interval=1.0)
+    r = eng2.submit(np.zeros(D), learner=0, at=0.25)
+    res2 = eng2.serve()
+    assert res2.num_requests == 1
+    pct2 = res2.latency_percentiles()
+    assert pct2["p50"] == pct2["p90"] == pct2["p99"] == \
+        pytest.approx(r.latency)
+    assert res2.mean_latency == res2.max_latency == \
+        pytest.approx(r.latency)
+    assert all(np.isfinite(v) for v in res2.summary().values())
+
+
+def test_multi_tenant_parity_shared_engine():
+    """Several protocol instances share one engine, clock and slot
+    pool; each tenant's protocol view still reproduces its own
+    engine.run bit-for-bit, and launched batches never mix tenants."""
+    from repro.telemetry.trace import Tracer
+    X, Y = _stream()
+    pcfg_a = ProtocolConfig(kind="dynamic", delta=1.0)
+    pcfg_b = ProtocolConfig(kind="periodic", period=3)
+    ref_a = engine.run(_lcfg(), pcfg_a, X, Y)
+    ref_b = engine.run(_lcfg(), pcfg_b, X, Y)
+
+    tr = Tracer()
+    eng = KernelServingEngine(_lcfg(), pcfg_a, M, policy="continuous",
+                              slots=2, predict_cost=0.05, tracer=tr)
+    tb = eng.add_tenant(_lcfg(), pcfg_b)
+    assert eng.num_tenants == 2
+    rng = np.random.default_rng(0)
+    for t in range(T):
+        at = float(t + 1)
+        for i in range(M):
+            eng.feedback(X[t, i], Y[t, i], learner=i, at=at, tenant=0)
+            eng.feedback(X[t, i], Y[t, i], learner=i, at=at, tenant=tb)
+        # interleaved query traffic against both tenants
+        eng.submit(X[t, 0], learner=int(rng.integers(M)),
+                   at=at + 0.1, tenant=0)
+        eng.submit(X[t, 0], learner=int(rng.integers(M)),
+                   at=at + 0.2, tenant=tb)
+    eng.serve()
+    res_a, res_b = eng.results()
+    _assert_protocol_identical(ref_a, res_a.sim, "tenant0")
+    _assert_protocol_identical(ref_b, res_b.sim, "tenant1")
+    assert res_a.num_requests == res_b.num_requests == T
+    # every launched batch belongs to exactly one tenant
+    batches = [e for e in tr.events if e["ph"] == "X"
+               and e["name"].startswith("predict/bucket")]
+    assert batches and all(e["args"]["tenant"] in (0, tb)
+                           for e in batches)
+
+
+def test_add_tenant_validates_input_dim():
+    eng = KernelServingEngine(_lcfg(), ProtocolConfig(kind="dynamic",
+                                                      delta=0.1), M)
+    bad = LearnerConfig(algo="linear_sgd", loss="hinge", eta=0.1,
+                        lam=0.001, dim=D + 1)
+    with pytest.raises(ValueError):
+        eng.add_tenant(bad, ProtocolConfig(kind="dynamic", delta=0.1))
+
+
+def test_continuous_launches_on_arrival_not_grid():
+    """The continuous policy's whole point: an idle engine answers a
+    lone request in exactly predict_cost — no grid wait."""
+    pcfg = ProtocolConfig(kind="dynamic", delta=0.1)
+    eng = KernelServingEngine(_lcfg(), pcfg, M, policy="continuous",
+                              predict_cost=0.25, tick_interval=1.0)
+    r = eng.submit(np.zeros(D), learner=0, at=0.3)
+    res = eng.serve()
+    assert r.done_time == pytest.approx(0.55)
+    assert r.latency == pytest.approx(0.25)
+    assert res.ticks == 0                      # no grid involved
+    assert res.policy == "continuous"
+
+
+def test_continuous_hold_coalesces_within_budget():
+    """With a latency budget, an under-full launch waits for fill —
+    but never past oldest.arrival + max_wait."""
+    pcfg = ProtocolConfig(kind="dynamic", delta=0.1)
+    # lone request: held the full budget, then served
+    eng = KernelServingEngine(_lcfg(), pcfg, M, policy="continuous",
+                              predict_cost=0.1, max_wait=0.3,
+                              buckets=(4,))
+    r = eng.submit(np.zeros(D), learner=0, at=1.0)
+    eng.serve()
+    assert r.done_time == pytest.approx(1.0 + 0.3 + 0.1)
+
+    # a second arrival inside the hold window rides the same launch
+    eng2 = KernelServingEngine(_lcfg(), pcfg, M, policy="continuous",
+                               predict_cost=0.1, max_wait=0.3,
+                               buckets=(4,))
+    ra = eng2.submit(np.zeros(D), learner=0, at=1.0)
+    rb = eng2.submit(np.zeros(D), learner=0, at=1.2)
+    res2 = eng2.serve()
+    assert res2.launches == 1                 # coalesced
+    assert ra.done_time == rb.done_time == pytest.approx(1.4)
+
+    # a full bucket launches immediately, budget or not
+    eng3 = KernelServingEngine(_lcfg(), pcfg, M, policy="continuous",
+                               predict_cost=0.1, max_wait=0.5,
+                               buckets=(2,))
+    rs = [eng3.submit(np.zeros(D), learner=0, at=1.0) for _ in range(2)]
+    eng3.serve()
+    assert all(r.done_time == pytest.approx(1.1) for r in rs)
+
+
+def test_slots_bound_concurrent_launches():
+    """slots=k is k-way in-flight batching on one shard: with two
+    lanes, two same-shard launches overlap; with one, they serialize
+    (the PR 5 single predict server)."""
+    pcfg = ProtocolConfig(kind="dynamic", delta=0.1)
+    for slots, dones in ((1, [1.0, 2.0]), (2, [1.0, 1.0])):
+        eng = KernelServingEngine(_lcfg(), pcfg, M, policy="continuous",
+                                  predict_cost=1.0, buckets=(1,),
+                                  slots=slots)
+        rs = [eng.submit(np.zeros(D), learner=0, at=0.0)
+              for _ in range(2)]
+        eng.serve()
+        assert [r.done_time for r in rs] == pytest.approx(dones), slots
+
+
+def test_admission_shed_refuses_and_marks():
+    """Over the queue bound with overload='shed', a request is refused:
+    marked shed, never served, excluded from the latency ledger."""
+    pcfg = ProtocolConfig(kind="dynamic", delta=0.1)
+    eng = KernelServingEngine(_lcfg(), pcfg, M, policy="continuous",
+                              predict_cost=1.0, buckets=(1,),
+                              max_queue=1, overload="shed")
+    ra = eng.submit(np.zeros(D), learner=0, at=0.0)   # launches at once
+    rb = eng.submit(np.zeros(D), learner=0, at=0.0)   # queued
+    rc = eng.submit(np.zeros(D), learner=0, at=0.0)   # queue full: shed
+    res = eng.serve()
+    assert ra.done and rb.done
+    assert rc.shed and not rc.done
+    assert res.num_shed == 1
+    assert res.num_requests == 2              # shed never enters stats
+
+
+def test_admission_defer_retries_and_accrues_latency():
+    """overload='defer' re-prices the arrival onto the event clock:
+    the request eventually lands, and its latency counts from the
+    ORIGINAL arrival — deferral is never free."""
+    pcfg = ProtocolConfig(kind="dynamic", delta=0.1)
+    eng = KernelServingEngine(_lcfg(), pcfg, M, policy="continuous",
+                              predict_cost=1.0, buckets=(1,),
+                              max_queue=1, overload="defer",
+                              defer_interval=0.25)
+    rs = [eng.submit(np.zeros(D), learner=0, at=0.0) for _ in range(3)]
+    res = eng.serve()
+    assert all(r.done for r in rs)            # nothing lost
+    assert res.num_shed == 0
+    assert res.num_deferred >= 1
+    last = max(rs, key=lambda r: r.done_time)
+    assert last.deferrals >= 1
+    assert last.latency >= 2.0                # queued behind two launches
+    assert res.num_requests == 3
