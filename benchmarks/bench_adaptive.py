@@ -48,7 +48,7 @@ def _run(pcfg, X, Y):
             syncs_half = int(state.syncs)
     # steady-state sync rate: second half only (controller burn-in)
     rate2 = (int(state.syncs) - syncs_half) / (Tn - Tn // 2)
-    return total, int(state.syncs), float(state.bytes_sent), rate2
+    return total, int(state.syncs), int(state.bytes_sent), rate2
 
 
 def run(quick: bool = False):

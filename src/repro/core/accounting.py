@@ -222,6 +222,7 @@ def device_sync_bytes_kernel(
     if union.shape[0] != cap:
         raise ValueError(
             f"union capacity {union.shape[0]} != ledger capacity {cap}")
+    # reprolint: allow[ACC01] int32 is safe here: the worst >= 2**31 guard above rejects overflow
     return total.astype(jnp.int32), DeviceLedger(known=union)
 
 

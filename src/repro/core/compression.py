@@ -26,7 +26,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from .rkhs import KernelSpec, SVModel, active_mask, gram
+from .rkhs import KernelSpec, SVModel, active_mask, gram, quadform
 
 Array = jnp.ndarray
 
@@ -83,7 +83,7 @@ def truncate(
     dropped = act & ~keep
     beta = jnp.where(dropped, f.alpha, 0.0)
     K = gram(spec, f.sv, f.sv)
-    eps_sq = jnp.maximum(beta @ K @ beta, 0.0)
+    eps_sq = jnp.maximum(quadform(K, beta, beta), 0.0)
     return _pack_to_budget(f, keep, tau), jnp.sqrt(eps_sq)
 
 
@@ -107,12 +107,13 @@ def project(
     # Restrict to kept rows/cols by masking; ridge keeps the masked-out
     # diagonal invertible without affecting the kept block's solution.
     K_kk = K * keep_f[:, None] * keep_f[None, :]
-    K_kk = K_kk + (ridge + (1.0 - keep_f)) * jnp.eye(f.budget, dtype=K.dtype)
-    rhs = (K @ beta) * keep_f
+    K_kk = K_kk + (ridge + (1.0 - keep_f))[:, None] * jnp.eye(f.budget,
+                                                              dtype=K.dtype)
+    rhs = jnp.sum(K * beta[None, :], axis=-1) * keep_f
     c = jnp.linalg.solve(K_kk, rhs)
     c = c * keep_f
 
-    eps_sq = beta @ K @ beta - beta @ K @ c
+    eps_sq = quadform(K, beta, beta) - quadform(K, beta, c)
     eps_sq = jnp.maximum(eps_sq, 0.0)
 
     merged = f._replace(alpha=jnp.where(keep, f.alpha + c, f.alpha))

@@ -65,7 +65,9 @@ def check_comm_bound(
     v_bound = (eta / np.sqrt(delta)) * res.total_loss
     bound = v_bound * 2 * m * union_size * bm.B_alpha + m * union_size * bm.B_x
     c = max(res.total_bytes, 1e-12)
-    return res.total_bytes <= bound + 1e-9, float(bound / c)
+    # integer bytes vs the (float) Thm. 7 bound, no epsilon slop: the
+    # bound has orders-of-magnitude slack, a boundary tie is not real.
+    return res.total_bytes <= bound, float(bound / c)
 
 
 def check_continuous_comm_bound(
@@ -73,7 +75,7 @@ def check_continuous_comm_bound(
 ) -> bool:
     """Prop. 5:  C_C(T,m) <= 2 T m |Sbar_T| B_alpha + m |Sbar_T| B_x."""
     bound = 2 * T * m * union_size * bm.B_alpha + m * union_size * bm.B_x
-    return total_bytes <= bound + 1e-9
+    return total_bytes <= bound   # both sides int: exact, no slop
 
 
 def quiescent(res: SimResult, window_frac: float = 0.2) -> bool:
@@ -126,6 +128,7 @@ def audit(
     c_unit = 2 * m * max(union_size, 1) * bm.B_alpha  # bytes per sync
     return CriterionReport(
         consistent_ratio=float(trend[-1]),
+        # reprolint: allow[ACC01] Def. 1 ratio is a float diagnostic; the ledger itself stays int
         adaptive_ratio=float(res.total_bytes / max(m * res.total_loss * c_unit, 1e-9)),
         sync_bound_ok=s_ok,
         sync_bound_slack=s_slack,

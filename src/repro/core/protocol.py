@@ -316,7 +316,8 @@ def apply_protocol(
 
     if bytes_per_sync is None:
         one = jax.tree.map(lambda x: x[0], stacked)
-        bytes_per_sync = 2.0 * m * model_bytes(one)
+        # python-int cost: exact until it meets the (float32) carry
+        bytes_per_sync = 2 * m * model_bytes(one)
 
     if cfg.kind == "none":
         div = divergence(stacked)

@@ -59,7 +59,10 @@ def featurize(spec: RFFSpec, W: Array, b: Array, X: Array) -> Array:
     materialized (..., D, d) intermediate is small at simulation scale;
     the Pallas path owns the large-D regime.
     """
-    proj = jnp.sum(X[..., None, :] * W, axis=-1) + b
+    lead = tuple(range(X.ndim - 1))     # explicit broadcast of the
+    Wx = jnp.expand_dims(W, lead)       # (D, d) params over X's batch
+    bx = jnp.expand_dims(b, lead)       # axes (rank promotion is off)
+    proj = jnp.sum(X[..., None, :] * Wx, axis=-1) + bx
     return jnp.sqrt(2.0 / spec.num_features) * jnp.cos(proj)
 
 
@@ -82,7 +85,7 @@ def make_update(spec: RFFSpec, W: Array, bias: Array, *, eta: float = 0.5,
     def update(state: RFFLearnerState, example):
         x, y = example
         z = featurize(spec, W, bias, x[None])[0]
-        yhat = state.w @ z + state.b
+        yhat = jnp.sum(state.w * z) + state.b
         if loss == "hinge":
             ell = jnp.maximum(0.0, 1.0 - y * yhat)
             g = jnp.where(ell > 0, -y, 0.0)

@@ -65,13 +65,13 @@ def gram(spec: KernelSpec, X: Array, Y: Array) -> Array:
     X = X.astype(jnp.float32)
     Y = Y.astype(jnp.float32)
     if spec.kind == "linear":
-        return X @ Y.T
+        return X @ Y.T  # reprolint: allow[DET01] bulk-Gram oracle; the bitwise path is _gram_rows
     if spec.kind == "poly":
-        return (X @ Y.T + spec.coef0) ** spec.degree
+        return (X @ Y.T + spec.coef0) ** spec.degree  # reprolint: allow[DET01] bulk-Gram oracle
     # gaussian
     xx = jnp.sum(X * X, axis=-1)[:, None]
     yy = jnp.sum(Y * Y, axis=-1)[None, :]
-    sq = jnp.maximum(xx + yy - 2.0 * (X @ Y.T), 0.0)
+    sq = jnp.maximum(xx + yy - 2.0 * (X @ Y.T), 0.0)  # reprolint: allow[DET01] bulk-Gram oracle
     return jnp.exp(-spec.gamma * sq)
 
 
@@ -158,13 +158,25 @@ def predict(spec: KernelSpec, f: SVModel, X: Array) -> Array:
     measured from, so it must not change with the learner-axis layout.
     """
     a = jnp.where(active_mask(f), f.alpha, 0.0)
-    return jnp.sum(_gram_rows(spec, X, f.sv) * a, axis=-1)
+    return jnp.sum(_gram_rows(spec, X, f.sv) * a[None, :], axis=-1)
+
+
+def quadform(K: Array, a: Array, b: Array) -> Array:
+    """a^T K b with a layout-independent reduction order.
+
+    Row-wise multiply + last-axis sum, then one outer sum — the same
+    accumulation order whether the caller is batched, vmapped or
+    sharded.  ``a @ K @ b`` would lower to gemv pairs whose reduction
+    order depends on operand layout (DESIGN.md Sec. 9); every quadform
+    feeding divergence / epsilon / norm values must come through here.
+    """
+    return jnp.sum(a * jnp.sum(K * b[None, :], axis=-1))
 
 
 def norm_sq(spec: KernelSpec, f: SVModel) -> Array:
     """||f||_H^2 = alpha^T K(S, S) alpha."""
     a = jnp.where(active_mask(f), f.alpha, 0.0)
-    return a @ gram(spec, f.sv, f.sv) @ a
+    return quadform(gram(spec, f.sv, f.sv), a, a)
 
 
 def dist_sq(spec: KernelSpec, f: SVModel, g: SVModel) -> Array:
@@ -172,9 +184,9 @@ def dist_sq(spec: KernelSpec, f: SVModel, g: SVModel) -> Array:
     af = jnp.where(active_mask(f), f.alpha, 0.0)
     ag = jnp.where(active_mask(g), g.alpha, 0.0)
     return (
-        af @ gram(spec, f.sv, f.sv) @ af
-        + ag @ gram(spec, g.sv, g.sv) @ ag
-        - 2.0 * (af @ gram(spec, f.sv, g.sv) @ ag)
+        quadform(gram(spec, f.sv, f.sv), af, af)
+        + quadform(gram(spec, g.sv, g.sv), ag, ag)
+        - 2.0 * quadform(gram(spec, f.sv, g.sv), af, ag)
     )
 
 

@@ -243,7 +243,8 @@ def run_linear_simulation(
     @jax.jit
     def diverg(st):
         wbar = jnp.mean(st.w, axis=0); bbar = jnp.mean(st.b)
-        return jnp.mean(jnp.sum((st.w - wbar) ** 2, -1) + (st.b - bbar) ** 2)
+        return jnp.mean(jnp.sum((st.w - wbar[None, :]) ** 2, -1)
+                        + (st.b - bbar) ** 2)
 
     @jax.jit
     def avg(st):

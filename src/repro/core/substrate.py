@@ -597,7 +597,7 @@ class _PrimalSubstrate(Substrate):
     def divergence(self, models) -> Array:
         wbar = jnp.mean(models.w, axis=0)
         bbar = jnp.mean(models.b)
-        return jnp.mean(jnp.sum((models.w - wbar) ** 2, -1)
+        return jnp.mean(jnp.sum((models.w - wbar[None, :]) ** 2, -1)
                         + (models.b - bbar) ** 2)
 
     def sync_payload(self, models, ledger):

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 def gram_ref(X, Y, *, kind="gaussian", gamma=1.0, degree=3, coef0=1.0):
     X = X.astype(jnp.float32)
     Y = Y.astype(jnp.float32)
-    cross = X @ Y.T
+    cross = X @ Y.T  # reprolint: allow[DET01] bulk oracle, compared under PARITY_RTOL
     if kind == "linear":
         return cross
     if kind == "poly":
@@ -27,12 +27,14 @@ def rff_ref(X, W, b, *, num_features=None):
     X = X.astype(jnp.float32)
     W = W.astype(jnp.float32)
     D = num_features or W.shape[0]
-    return jnp.sqrt(2.0 / D) * jnp.cos(X @ W.T + b.astype(jnp.float32))
+    # reprolint: allow[DET01] bulk oracle, compared under PARITY_RTOL
+    return jnp.sqrt(2.0 / D) * jnp.cos(X @ W.T + b.astype(jnp.float32)[None, :])
 
 
 def quadform_ref(X, Y, alpha, beta, *, kind="gaussian", gamma=1.0,
                  degree=3, coef0=1.0):
     K = gram_ref(X, Y, kind=kind, gamma=gamma, degree=degree, coef0=coef0)
+    # reprolint: allow[DET01] bulk oracle, compared under PARITY_RTOL
     return alpha.astype(jnp.float32) @ K @ beta.astype(jnp.float32)
 
 
@@ -45,8 +47,12 @@ def sv_predict_ref(X, SV, A, *, kind="gaussian", gamma=1.0, degree=3,
     multiplied by 0, never looked at)."""
 
     def one(x, S, a):
-        return gram_ref(x[None, :], S, kind=kind, gamma=gamma,
-                        degree=degree, coef0=coef0)[0] @ a.astype(jnp.float32)
+        # multiply + sum, not `@`: the serving predict path is under the
+        # bitwise contract, so the oracle pins the same reduction order
+        # as rkhs.predict (DESIGN.md Sec. 9).
+        k = gram_ref(x[None, :], S, kind=kind, gamma=gamma,
+                     degree=degree, coef0=coef0)[0]
+        return jnp.sum(k * a.astype(jnp.float32))
 
     return jax.vmap(one)(X, SV, A)
 
@@ -68,8 +74,9 @@ def primal_step_ref(X, Yl, w, b, *, W=None, bias=None, scale=1.0,
     w = w.astype(jnp.float32)
     b = b.astype(jnp.float32)
     if W is not None:
+        # reprolint: allow[DET01] bulk oracle, compared under PARITY_RTOL
         z = scale * jnp.cos(X @ W.T.astype(jnp.float32)
-                            + bias.astype(jnp.float32))
+                            + bias.astype(jnp.float32)[None, :])
     else:
         z = X
     yhat = jnp.sum(w * z, axis=-1) + b

@@ -144,7 +144,7 @@ def main():
         print(f"step {t:4d} loss={float(loss):8.4f} "
               f"syncs={int(state.pstate.syncs):3d} "
               f"divergence={float(state.pstate.last_divergence):10.3e} "
-              f"bytes={float(state.pstate.bytes_sent):.3e}")
+              f"bytes={int(state.pstate.bytes_sent):d}")
     print(f"done in {time.time() - t0:.1f}s; "
           f"{int(state.pstate.syncs)}/{args.steps} rounds synchronized")
 

@@ -139,7 +139,8 @@ def encdec_loss(params: Params, cfg: ModelConfig, frames: Array,
                 tokens: Array, labels: Array) -> Array:
     enc_out = encode(params, cfg, frames)
     pad_bias = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, 0.0, -1e30)
-    logits = decode_train(params, cfg, tokens, enc_out).astype(jnp.float32) + pad_bias
+    logits = (decode_train(params, cfg, tokens, enc_out).astype(jnp.float32)
+              + pad_bias[None, None, :])
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
     return jnp.mean(logz - gold)

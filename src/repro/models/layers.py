@@ -10,6 +10,13 @@ Array = jnp.ndarray
 Params = Dict[str, Array]
 
 
+def expand_left(v: Array, ndim: int) -> Array:
+    """1-d parameter -> rank ``ndim`` with leading size-1 axes, so the
+    broadcast is explicit (jax_numpy_rank_promotion='raise' bans the
+    implicit ``(B, S, d) op (d,)`` form)."""
+    return jnp.expand_dims(v, tuple(range(ndim - 1)))
+
+
 # ---------------------------------------------------------------------------
 # Norms
 # ---------------------------------------------------------------------------
@@ -33,7 +40,8 @@ def rmsnorm(p: Params, x: Array, eps: float = 1e-6) -> Array:
     x32 = x.astype(jnp.float32)
     var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
     out = x32 * jax.lax.rsqrt(var + eps)
-    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    scale = expand_left(p["scale"].astype(jnp.float32), out.ndim)
+    return (out * scale).astype(x.dtype)
 
 
 def layernorm_init(d: int, dtype) -> Params:
@@ -45,7 +53,8 @@ def layernorm(p: Params, x: Array, eps: float = 1e-6) -> Array:
     mu = jnp.mean(x32, axis=-1, keepdims=True)
     var = jnp.var(x32, axis=-1, keepdims=True)
     out = (x32 - mu) * jax.lax.rsqrt(var + eps)
-    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    out = (out * expand_left(p["scale"].astype(jnp.float32), out.ndim)
+           + expand_left(p["bias"].astype(jnp.float32), out.ndim))
     return out.astype(x.dtype)
 
 
@@ -74,7 +83,7 @@ def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False,
 def dense(p: Params, x: Array) -> Array:
     y = x @ p["w"]
     if "b" in p:
-        y = y + p["b"]
+        y = y + expand_left(p["b"], y.ndim)
     return y
 
 
@@ -99,7 +108,8 @@ def apply_rope(x: Array, positions: Array, theta: float) -> Array:
     """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
     hd = x.shape[-1]
     freqs = rope_freqs(hd, theta)                       # (hd/2,)
-    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = (positions[..., None].astype(jnp.float32)
+              * expand_left(freqs, positions.ndim + 1))  # (..., S, hd/2)
     angles = angles[..., None, :]                       # (..., S, 1, hd/2)
     cos, sin = jnp.cos(angles), jnp.sin(angles)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
@@ -123,7 +133,7 @@ def apply_mrope(x: Array, positions3: Array, theta: float,
     )                                                   # (hd/2,) in {0,1,2}
     pos = jnp.take(positions3, sel, axis=0)             # (hd/2, B, S) -> via take on axis 0
     pos = jnp.moveaxis(pos, 0, -1)                      # (B, S, hd/2)
-    angles = pos.astype(jnp.float32) * freqs            # (B, S, hd/2)
+    angles = pos.astype(jnp.float32) * freqs[None, None, :]  # (B, S, hd/2)
     angles = angles[..., None, :]                       # (B, S, 1, hd/2)
     cos, sin = jnp.cos(angles), jnp.sin(angles)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
@@ -186,14 +196,15 @@ def causal_conv1d(p: Params, x: Array, left_context: Optional[Array] = None) -> 
     else:
         pad = jnp.concatenate([left_context.astype(x.dtype), x], axis=1)
     out = sum(
-        pad[:, i : i + x.shape[1], :] * p["w"][i] for i in range(width)
+        pad[:, i : i + x.shape[1], :] * p["w"][i][None, None, :]
+        for i in range(width)
     )
-    return out + p["b"]
+    return out + p["b"][None, None, :]
 
 
 def conv1d_step(p: Params, buf: Array, x_t: Array) -> Tuple[Array, Array]:
     """Single decode step.  buf: (B, width-1, C) past inputs."""
     width = p["w"].shape[0]
     window = jnp.concatenate([buf, x_t[:, None, :]], axis=1)   # (B, width, C)
-    out = jnp.einsum("bwc,wc->bc", window, p["w"]) + p["b"]
+    out = jnp.einsum("bwc,wc->bc", window, p["w"]) + p["b"][None, :]
     return window[:, 1:, :], out

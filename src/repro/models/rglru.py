@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from .config import ModelConfig
-from .layers import causal_conv1d, conv1d_init, conv1d_step, dense, dense_init
+from .layers import (causal_conv1d, conv1d_init, conv1d_step, dense,
+                     dense_init, expand_left)
 
 Array = jnp.ndarray
 Params = Dict[str, Array]
@@ -60,7 +61,7 @@ def rglru_init(key, cfg: ModelConfig, dtype) -> Params:
 def _gates(p: Params, u: Array):
     r = jax.nn.sigmoid(dense(p["w_a"], u).astype(jnp.float32))
     i = jax.nn.sigmoid(dense(p["w_i"], u).astype(jnp.float32))
-    log_a = -_C * jax.nn.softplus(p["Lambda"]) * r
+    log_a = -_C * expand_left(jax.nn.softplus(p["Lambda"]), r.ndim) * r
     a = jnp.exp(log_a)
     gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
     return a, gated_in

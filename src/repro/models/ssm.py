@@ -84,7 +84,7 @@ def _ssd_chunked(cfg: ModelConfig, x: Array, Bm: Array, Cm: Array,
     Bq = jnp.repeat(Bm.reshape(Bsz, nc, Q, G, N), rep, axis=3)   # (B,nc,Q,H,N)
     Cq = jnp.repeat(Cm.reshape(Bsz, nc, Q, G, N), rep, axis=3)
     dtq = dt.reshape(Bsz, nc, Q, H)
-    l = dtq * a                                           # (B,nc,Q,H) log-decays
+    l = dtq * a[None, None, None, :]                      # (B,nc,Q,H) log-decays
     cum = jnp.cumsum(l, axis=2)                           # inclusive cumsum
 
     # intra-chunk: M[t,s] = (C_t . B_s) * exp(cum_t - cum_s) * dt_s, s <= t
@@ -150,7 +150,7 @@ def ssm_forward(cfg: ModelConfig, p: Params, x: Array,
     new_conv_buf = conv_tail_src[:, -(cfg.ssm_conv - 1):, :]
     xc, Bm, Cm = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
 
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
     xh = xc.reshape(Bsz, S, H, P).astype(jnp.float32)
     Bm = Bm.reshape(Bsz, S, G, N).astype(jnp.float32)
     Cm = Cm.reshape(Bsz, S, G, N).astype(jnp.float32)
@@ -200,9 +200,9 @@ def ssm_decode(cfg: ModelConfig, p: Params, x_t: Array,
     conv_out = jax.nn.silu(conv_out)
     xc, Bm, Cm = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
 
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,H)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])  # (B,H)
     a = -jnp.exp(p["A_log"])
-    decay = jnp.exp(dt * a)                                          # (B,H)
+    decay = jnp.exp(dt * a[None, :])                                 # (B,H)
 
     xh = xc.reshape(Bsz, H, P).astype(jnp.float32)
     Bmh = jnp.repeat(Bm.reshape(Bsz, G, N), H // G, axis=1)          # (B,H,N)

@@ -313,7 +313,7 @@ def lm_loss(params: Params, cfg: ModelConfig, tokens: Array, labels: Array,
     # §Perf: mask padded vocab columns with an ADDITIVE bias fused into
     # the fp32 upcast (one full-size intermediate instead of two).
     pad_bias = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, 0.0, -1e30)
-    logits = logits.astype(jnp.float32) + pad_bias
+    logits = logits.astype(jnp.float32) + pad_bias[None, None, :]
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
     return jnp.mean(logz - gold) + aux

@@ -211,6 +211,7 @@ class SystemModel:
             lat *= math.exp(cfg.latency_jitter * z
                             - 0.5 * cfg.latency_jitter ** 2)
         if math.isfinite(cfg.bandwidth):
+            # reprolint: allow[ACC01] bandwidth term: bytes->seconds in the time model, not ledger math
             lat += nbytes / cfg.bandwidth
         return lat
 
@@ -226,7 +227,7 @@ class SystemModel:
 
 
 def barrier_wall_clock(compute_times: np.ndarray, num_syncs: int,
-                       model: SystemModel, sync_bytes: float = 0.0) -> float:
+                       model: SystemModel, sync_bytes: int = 0) -> float:
     """Simulated wall-clock of the lockstep serial driver on the same
     cluster: every round ends with a global barrier (sum of per-round
     maxima), every synchronization adds a round trip to the
@@ -235,5 +236,6 @@ def barrier_wall_clock(compute_times: np.ndarray, num_syncs: int,
     per_round_max = compute_times.max(axis=1)
     total = float(per_round_max.sum()) + num_syncs * model.expected_round_trip()
     if math.isfinite(model.cfg.bandwidth):
+        # reprolint: allow[ACC01] bandwidth term: bytes->seconds in the time model, not ledger math
         total += sync_bytes / model.cfg.bandwidth
     return total

@@ -158,7 +158,7 @@ def run_async_simulation(
             compute_times,
             len(coord.sync_log) if barrier_num_syncs is None
             else barrier_num_syncs,
-            model, sync_bytes=float(network.total_bytes)),
+            model, sync_bytes=int(network.total_bytes)),
         link_bytes=network.link_bytes(),
         mean_staleness=float(np.mean(lags)) if lags else 0.0,
         max_staleness=int(np.max(lags)) if lags else 0,

@@ -74,7 +74,7 @@ class LMServingEngine:
             while len(batch_reqs) < self.B:   # pad batch with a dummy
                 batch_reqs.append(Request(uid=-1, prompt=np.zeros(1, np.int32),
                                           max_new_tokens=0))
-            t0 = time.time()
+            t0 = time.perf_counter()
             batch, S = self._make_batch(batch_reqs)
             caches = self.api.init_caches(self.B, self.max_len)
             logits, caches = self._prefill(self.params, batch, caches)
@@ -90,7 +90,7 @@ class LMServingEngine:
                         if ((r.eos_token is not None and t == r.eos_token)
                                 or len(r.output) >= r.max_new_tokens):
                             r.done = True
-                            r.latency_s = time.time() - t0
+                            r.latency_s = time.perf_counter() - t0
                 # early exit: once every live sequence has finished
                 # (eos or its own token budget), stop decoding instead
                 # of burning steps to the batch-wide max.
@@ -101,7 +101,7 @@ class LMServingEngine:
                 next_tok = jnp.argmax(
                     logits[..., : self.cfg.vocab], axis=-1).astype(jnp.int32)
 
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             for r in batch_reqs:
                 if r.uid >= 0:
                     if not r.done:            # max_new_tokens == 0 edge

@@ -194,6 +194,7 @@ class CriterionMonitor:
             cumulative_loss=np.asarray(self._loss, np.float64),
             cumulative_bytes=nbytes,
             bound=bound,
+            # reprolint: allow[ACC01] Def. 1 ratio track is a float diagnostic; observe() compares exact ints
             ratio=nbytes / np.maximum(bound, 1e-12),
             violation_round=self.violation_round,
         )
@@ -204,7 +205,7 @@ class CriterionMonitor:
         instant at the violation round if there is one."""
         for t in range(self.rounds):
             tracer.counter(f"{name}/bytes", float(t),
-                           {"cumulative": float(self._bytes[t]),
+                           {"cumulative": int(self._bytes[t]),
                             "bound": float(self._bound[t])},
                            pid=PID_MONITOR)
             tracer.counter(f"{name}/loss", float(t),
@@ -214,7 +215,7 @@ class CriterionMonitor:
             t = self.violation_round
             tracer.instant(f"{name}/violation", float(t), pid=PID_MONITOR,
                            args={"round": t,
-                                 "bytes": float(self._bytes[t]),
+                                 "bytes": int(self._bytes[t]),
                                  "bound": float(self._bound[t])})
 
 

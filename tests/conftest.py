@@ -8,6 +8,25 @@ import pytest
 # dry-run, forces 512 host devices in its own process).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import jax  # noqa: E402  (after the path insert, before any repro import)
+
+# ---------------------------------------------------------------------------
+# Strict numerics for the whole suite (ISSUE 9).
+#
+# Rank promotion is where silent-broadcast bugs live: an (m,) array
+# meeting an (m, 1) array quietly produces (m, m) and every downstream
+# reduction still "works".  The bitwise-parity contract makes those
+# especially nasty — the numbers stay plausible while the reduction
+# geometry changes — so the suite runs with promotion as a hard error.
+#
+# jax_debug_nans re-runs de-optimized on every NaN producer; it is
+# opt-in (REPRO_DEBUG_NANS=1) because it disables the jit caching the
+# recompile-guard tests count on.
+# ---------------------------------------------------------------------------
+jax.config.update("jax_numpy_rank_promotion", "raise")
+if os.environ.get("REPRO_DEBUG_NANS") == "1":
+    jax.config.update("jax_debug_nans", True)
+
 # ---------------------------------------------------------------------------
 # THE backend-parity tolerance (ISSUE 7).
 #

@@ -95,7 +95,7 @@ def test_apply_protocol_counts_bytes():
     state = protocol.init_state(jax.tree.map(lambda x: x[0], st), 4)
     _, state = protocol.apply_protocol(cfg, st, state)
     # 2 * m * model_bytes = 2 * 4 * (6+1)*4 bytes
-    assert float(state.bytes_sent) == 2 * 4 * (7 * 4)
+    assert int(state.bytes_sent) == 2 * 4 * (7 * 4)
 
 
 def test_stacked_reference_mode():

@@ -1,0 +1,447 @@
+"""reprolint rule-engine tests (DESIGN.md Sec. 14).
+
+Golden positive/negative snippets per rule, suppression-comment and
+baseline round-trips, CLI exit codes, and the self-check that the
+committed baseline matches a fresh scan of the working tree.
+
+The snippets are scanned under synthetic repo-relative paths so the
+rules' scope predicates engage (e.g. DET01 only fires under
+``repro/core/``); path choice is part of each golden case.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from tools.reprolint import ALL_RULES, RULE_IDS  # noqa: E402
+from tools.reprolint.engine import (DEFAULT_BASELINE, Finding,  # noqa: E402
+                                    load_baseline, save_baseline,
+                                    scan_paths, scan_source)
+
+CORE = "src/repro/core/golden.py"          # in every bitwise scope
+RUNTIME = "src/repro/runtime/golden.py"    # clock-owned scope
+OUTSIDE = "benchmarks/golden.py"           # outside DET/CLK/JIT scopes
+
+
+def lint(src: str, path: str = CORE):
+    return scan_source(textwrap.dedent(src), path, ALL_RULES)
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# registry sanity
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_at_least_five_rules():
+    assert len(ALL_RULES) >= 5
+    assert len(set(RULE_IDS)) == len(RULE_IDS)
+    for rule in ALL_RULES:
+        assert rule.id and rule.title
+
+
+# ---------------------------------------------------------------------------
+# DET01 — layout-dependent contractions
+# ---------------------------------------------------------------------------
+
+
+DET_POSITIVES = [
+    "def f(a, K):\n    return a @ K\n",
+    "import jax.numpy as jnp\ndef f(a, b):\n    return jnp.dot(a, b)\n",
+    "import jax.numpy as jnp\ndef f(a, b):\n    return jnp.einsum('i,i->', a, b)\n",
+    "import numpy as np\ndef f(a, b):\n    return np.matmul(a, b)\n",
+]
+
+
+@pytest.mark.parametrize("src", DET_POSITIVES)
+def test_det01_positive(src):
+    assert "DET01" in rules_of(lint(src))
+
+
+def test_det01_negative_multiply_reduce():
+    src = """
+    import jax.numpy as jnp
+    def f(K, a):
+        return jnp.sum(a * jnp.sum(K * a[None, :], axis=-1))
+    """
+    assert "DET01" not in rules_of(lint(src))
+
+
+def test_det01_out_of_scope_module_not_flagged():
+    assert "DET01" not in rules_of(lint("def f(a, K):\n    return a @ K\n",
+                                        path=OUTSIDE))
+
+
+# ---------------------------------------------------------------------------
+# CLK01 — wall clock + global randomness
+# ---------------------------------------------------------------------------
+
+
+def test_clk01_positive_wall_clock():
+    src = "import time\ndef f():\n    return time.time()\n"
+    assert "CLK01" in rules_of(lint(src, path=RUNTIME))
+
+
+def test_clk01_positive_global_np_random_anywhere():
+    src = "import numpy as np\ndef f():\n    return np.random.rand(3)\n"
+    assert "CLK01" in rules_of(lint(src, path=OUTSIDE))
+
+
+def test_clk01_positive_stdlib_random():
+    src = "import random\ndef f():\n    return random.randint(0, 9)\n"
+    assert "CLK01" in rules_of(lint(src, path=OUTSIDE))
+
+
+def test_clk01_negative_perf_counter_and_seeded_rng():
+    src = """
+    import time
+    import numpy as np
+    def f(seed):
+        t0 = time.perf_counter()
+        rng = np.random.default_rng(np.random.SeedSequence([seed, 1]))
+        return rng.normal(), time.perf_counter() - t0
+    """
+    assert "CLK01" not in rules_of(lint(src, path=RUNTIME))
+
+
+def test_clk01_negative_wall_clock_outside_clock_scope():
+    src = "import time\ndef f():\n    return time.time()\n"
+    assert "CLK01" not in rules_of(lint(src, path=OUTSIDE))
+
+
+# ---------------------------------------------------------------------------
+# JIT01 — host syncs inside jit-traced roots
+# ---------------------------------------------------------------------------
+
+
+def test_jit01_positive_jitted_function():
+    src = """
+    import jax
+    import numpy as np
+    @jax.jit
+    def f(x):
+        return np.asarray(x)
+    """
+    assert "JIT01" in rules_of(lint(src))
+
+
+def test_jit01_positive_scan_body():
+    src = """
+    from jax import lax
+    def step(carry, xt):
+        print(carry)
+        return carry, xt
+    def run(xs):
+        return lax.scan(step, 0, xs)
+    """
+    assert "JIT01" in rules_of(lint(src))
+
+
+def test_jit01_positive_substrate_scan_face():
+    src = """
+    class MySubstrate:
+        def predict(self, models, x):
+            return float(x)
+    """
+    assert "JIT01" in rules_of(lint(src))
+
+
+def test_jit01_positive_item_sync():
+    src = """
+    import jax
+    @jax.jit
+    def f(x):
+        return x.item()
+    """
+    assert "JIT01" in rules_of(lint(src))
+
+
+def test_jit01_negative_host_side_numpy():
+    # not a jit root: free host-side function, numpy is fine
+    src = """
+    import numpy as np
+    def snapshot(bufs, t, model):
+        bufs[t] = np.asarray(model)
+    """
+    assert "JIT01" not in rules_of(lint(src))
+
+
+def test_jit01_negative_node_face_method():
+    # node-face Substrate methods are host-side by design
+    src = """
+    import numpy as np
+    class MySubstrate:
+        def upload_payload(self, bm, state, known):
+            return np.asarray(state)
+    """
+    assert "JIT01" not in rules_of(lint(src))
+
+
+def test_jit01_negative_float_of_static():
+    # float() of a non-parameter (static/global) value is a trace-time
+    # constant, not a host sync
+    src = """
+    import jax
+    LR = "0.5"
+    @jax.jit
+    def f(x):
+        return x * float(LR)
+    """
+    assert "JIT01" not in rules_of(lint(src))
+
+
+# ---------------------------------------------------------------------------
+# ACC01 — byte-ledger float contamination
+# ---------------------------------------------------------------------------
+
+
+def test_acc01_positive_epsilon_slop_comparison():
+    src = "def check(total_bytes, bound):\n    return total_bytes <= bound + 1e-9\n"
+    assert "ACC01" in rules_of(lint(src))
+
+
+def test_acc01_positive_float_literal_arithmetic():
+    src = "def cost(model_bytes, m):\n    return 2.0 * m * model_bytes\n"
+    assert "ACC01" in rules_of(lint(src))
+
+
+def test_acc01_positive_float_cast():
+    src = "def report(res):\n    return float(res.total_bytes)\n"
+    assert "ACC01" in rules_of(lint(src))
+
+
+def test_acc01_positive_int32_in_bytes_function():
+    src = """
+    import jax.numpy as jnp
+    def sync_bytes_kernel(total):
+        return total.astype(jnp.int32)
+    """
+    assert "ACC01" in rules_of(lint(src))
+
+
+def test_acc01_negative_integer_exact():
+    src = """
+    def check(total_bytes, bound):
+        return total_bytes <= bound
+    def cost(model_bytes, m):
+        return 2 * m * model_bytes
+    """
+    assert "ACC01" not in rules_of(lint(src))
+
+
+def test_acc01_negative_float_math_without_bytes():
+    src = "def ratio(a, b):\n    return a / max(b, 1e-9)\n"
+    assert "ACC01" not in rules_of(lint(src))
+
+
+# ---------------------------------------------------------------------------
+# REC01 — recompile hazards
+# ---------------------------------------------------------------------------
+
+
+def test_rec01_positive_mutable_default_factory():
+    src = """
+    import dataclasses
+    @dataclasses.dataclass(frozen=True)
+    class Spec:
+        tags: list = dataclasses.field(default_factory=list)
+    """
+    assert "REC01" in rules_of(lint(src))
+
+
+def test_rec01_positive_unhashable_annotation():
+    src = """
+    from dataclasses import dataclass
+    from typing import Dict
+    @dataclass(frozen=True)
+    class Spec:
+        table: Dict[str, int]
+    """
+    assert "REC01" in rules_of(lint(src))
+
+
+def test_rec01_positive_dict_literal_to_jitted_entry():
+    src = """
+    import jax
+    def f(opts, x):
+        return x
+    step = jax.jit(f)
+    def run(x):
+        return step({"lr": 0.5}, x)
+    """
+    assert "REC01" in rules_of(lint(src))
+
+
+def test_rec01_negative_unfrozen_dataclass_mutable_default():
+    # not frozen => not a jit cache key; serving's Request does this
+    src = """
+    import dataclasses
+    @dataclasses.dataclass
+    class Request:
+        output: list = dataclasses.field(default_factory=list)
+    """
+    assert "REC01" not in rules_of(lint(src))
+
+
+def test_rec01_negative_frozen_hashable_fields():
+    src = """
+    from dataclasses import dataclass
+    from typing import Tuple
+    @dataclass(frozen=True)
+    class Spec:
+        dims: Tuple[int, ...] = (1,)
+        name: str = "x"
+    """
+    assert "REC01" not in rules_of(lint(src))
+
+
+# ---------------------------------------------------------------------------
+# suppression comments
+# ---------------------------------------------------------------------------
+
+
+def test_allow_same_line_suppresses():
+    src = ("def f(a, K):\n"
+           "    return a @ K  # reprolint: allow[DET01] documented oracle\n")
+    assert "DET01" not in rules_of(lint(src))
+
+
+def test_allow_line_above_suppresses():
+    src = ("def f(a, K):\n"
+           "    # reprolint: allow[DET01] documented oracle\n"
+           "    return a @ K\n")
+    assert "DET01" not in rules_of(lint(src))
+
+
+def test_allow_wrong_rule_does_not_suppress():
+    src = ("def f(a, K):\n"
+           "    return a @ K  # reprolint: allow[CLK01] wrong id\n")
+    assert "DET01" in rules_of(lint(src))
+
+
+def test_allow_without_reason_does_not_suppress_and_is_flagged():
+    src = ("def f(a, K):\n"
+           "    return a @ K  # reprolint: allow[DET01]\n")
+    found = lint(src)
+    assert "DET01" in rules_of(found)       # not suppressed
+    assert "SUP00" in rules_of(found)       # and the bare allow is loud
+
+
+def test_allow_multiple_ids_one_comment():
+    src = ("import time\n"
+           "def f(a, K):\n"
+           "    # reprolint: allow[DET01,CLK01] measured oracle timing\n"
+           "    return a @ K, time.time()\n")
+    assert rules_of(lint(src, path=RUNTIME)) == set()
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip
+# ---------------------------------------------------------------------------
+
+
+def _findings_for(src: str, path: str = CORE):
+    return scan_source(textwrap.dedent(src), path, ALL_RULES)
+
+
+def test_baseline_round_trip(tmp_path):
+    findings = _findings_for("def f(a, K):\n    return a @ K\n")
+    assert findings
+    bl = tmp_path / "baseline.json"
+    save_baseline(bl, findings, {findings[0].fingerprint(): "legacy gemm"})
+    entries = load_baseline(bl)
+    assert [e.fingerprint() for e in entries] \
+        == [f.fingerprint() for f in findings]
+    assert entries[0].reason == "legacy gemm"
+
+
+def test_baseline_fingerprint_survives_line_moves():
+    a = _findings_for("def f(a, K):\n    return a @ K\n")
+    b = _findings_for("\n\n# moved down\ndef f(a, K):\n    return a @ K\n")
+    assert a[0].line != b[0].line
+    assert a[0].fingerprint() == b[0].fingerprint()
+
+
+def test_baseline_detects_stale_entries(tmp_path):
+    findings = _findings_for("def f(a, K):\n    return a @ K\n")
+    bl = tmp_path / "baseline.json"
+    save_baseline(bl, findings)
+    # the offending code is gone; the baseline entry is now stale
+    fresh = _findings_for("def f(a, K):\n    return a * K\n")
+    seen = {f.fingerprint() for f in fresh}
+    stale = [e for e in load_baseline(bl) if e.fingerprint() not in seen]
+    assert len(stale) == 1
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes
+# ---------------------------------------------------------------------------
+
+
+def _cli(*args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", *args],
+        cwd=cwd, capture_output=True, text=True)
+
+
+def test_cli_exit_zero_on_clean_tree_with_baseline():
+    proc = _cli("src", "tests", "benchmarks", "tools")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_exit_one_on_new_finding(tmp_path):
+    bad = tmp_path / "src" / "repro" / "core" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("def f(a, K):\n    return a @ K\n", encoding="utf-8")
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.reprolint",
+         str(bad), "--no-baseline"],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "DET01" in proc.stderr
+
+
+def test_cli_exit_two_on_usage_error():
+    proc = _cli("--no-such-flag")
+    assert proc.returncode == 2
+
+
+def test_cli_list_rules():
+    proc = _cli("--list-rules")
+    assert proc.returncode == 0
+    for rid in RULE_IDS:
+        assert rid in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# committed baseline self-check
+# ---------------------------------------------------------------------------
+
+
+def test_committed_baseline_matches_fresh_scan():
+    """Every committed baseline entry must still correspond to a real
+    finding (no stale grandfathering), every entry carries a real
+    reason, and the scan must produce nothing outside the baseline."""
+    findings = scan_paths(["src", "tests", "benchmarks", "tools"],
+                          ALL_RULES, root=REPO)
+    fresh = {f.fingerprint() for f in findings}
+    entries = load_baseline(DEFAULT_BASELINE)
+    known = {e.fingerprint() for e in entries}
+    assert fresh - known == set(), \
+        f"non-baselined findings: {sorted(fresh - known)}"
+    assert known - fresh == set(), \
+        f"stale baseline entries: {sorted(known - fresh)}"
+    for e in entries:
+        assert e.reason and "add a real reason" not in e.reason, \
+            f"baseline entry without a reason: {e}"

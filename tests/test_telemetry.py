@@ -373,3 +373,33 @@ def test_bench_compare_self_diff_and_regressions(tmp_path):
     rep.rows = rep.rows[1:]
     rep.save(str(missing))
     assert bc.main([str(base), str(missing)]) == 1
+
+
+def _bytes_report(nbytes: int, gram: int):
+    rows = [Row("demo/ledger", 500.0,
+                f"bytes={nbytes};hbm_gram_bytes={gram};ratio=0.33")]
+    return BenchReport("demo", rows, wall_seconds=0.1)
+
+
+def test_bench_compare_byte_metrics_exact(tmp_path):
+    # byte ledgers are integer-exact under seed (DESIGN.md Sec. 7):
+    # any drift in a *bytes* derived metric is a regression at exact
+    # integer equality, regardless of the timing threshold.
+    bc = _load_bench_compare()
+    base, same, drift = tmp_path / "b", tmp_path / "s", tmp_path / "d"
+    _bytes_report(150336, 262144).save(str(base))
+    _bytes_report(150336, 262144).save(str(same))
+    _bytes_report(150336, 262148).save(str(drift))     # 4-byte drift
+
+    assert bc.byte_metrics({"derived": "bytes=12;x=1.5"}) == {"bytes": 12}
+    assert bc.byte_metrics({"derived": "ratio=0.8"}) == {}
+
+    assert bc.main([str(base), str(same), "--threshold", "25"]) == 0
+    assert bc.main([str(base), str(drift), "--threshold", "25"]) == 1
+    regs = bc.compare(bc.load_dir(str(base)), bc.load_dir(str(drift)),
+                      threshold=25.0)
+    assert any(r.startswith("[bytes]") and "hbm_gram_bytes" in r
+               for r in regs)
+    # cross-version comparisons can downgrade the gate to a warning
+    assert bc.main([str(base), str(drift), "--threshold", "25",
+                    "--allow-bytes-drift"]) == 0

@@ -1,0 +1,9 @@
+"""Repo tooling package.
+
+Making ``tools`` a package lets ``python -m tools.reprolint`` (and
+imports like ``from tools.reprolint import scan_source`` in tests and
+``tools/check_docs.py``'s registry cross-check) resolve without
+sys.path games.  The scripts that are also runnable directly
+(``check_docs.py``, ``bench_compare.py``, ``substrate_matrix.py``)
+keep working as ``python tools/<script>.py``.
+"""

@@ -17,6 +17,12 @@ Both directories hold ``BENCH_<suite>.json`` files written by
   candidate (``serving_losses_identical=True`` -> ``=False``).
 * coverage — a suite or row present in the baseline is missing from
   the candidate.
+* bytes — a ``*bytes*``-named metric in a row's ``derived`` string
+  differs from the baseline.  Byte ledgers are integer-exact and
+  deterministic under seed (DESIGN.md Sec. 7), so unlike timings they
+  are compared as exact ints at any magnitude — ``--allow-bytes-drift``
+  downgrades this to a warning for cross-version comparisons where a
+  numerics change legitimately moved sync decisions.
 
 Self-diff of a directory against itself is a no-op and exits 0 — CI
 runs exactly that as a sanity check of the comparator itself.
@@ -35,6 +41,20 @@ from typing import Dict, List, Optional, Sequence, Tuple
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.common import load_report  # noqa: E402
+
+import re
+
+#: ``bytes=150336`` / ``hbm_gram_bytes=262144`` inside a row's derived
+#: string — integer-valued byte metrics only; ``bytes_identical=True``
+#: style claims don't match (no integer value), ratios don't either.
+BYTES_METRIC_RE = re.compile(r"\b([\w]*bytes[\w]*)=(-?\d+)\b")
+
+
+def byte_metrics(row: dict) -> Dict[str, int]:
+    """name -> exact int value for every byte metric in ``derived``."""
+    derived = row.get("derived") or ""
+    return {name: int(val)
+            for name, val in BYTES_METRIC_RE.findall(derived)}
 
 
 def load_dir(path: str) -> Dict[str, dict]:
@@ -59,7 +79,8 @@ def threshold_for(name: str, default: float,
 def compare(baseline: Dict[str, dict], candidate: Dict[str, dict],
             threshold: float = 1.5,
             overrides: Sequence[Tuple[str, float]] = (),
-            min_us: float = 100.0) -> List[str]:
+            min_us: float = 100.0,
+            bytes_exact: bool = True) -> List[str]:
     """Regression messages; empty means the candidate passes."""
     regressions: List[str] = []
     for suite, base in sorted(baseline.items()):
@@ -76,6 +97,17 @@ def compare(baseline: Dict[str, dict], candidate: Dict[str, dict],
                 regressions.append(f"[coverage] row {name!r} missing "
                                    "from candidate")
                 continue
+            base_bytes = byte_metrics(row)
+            cand_bytes = byte_metrics(other)
+            for metric, want in sorted(base_bytes.items()):
+                got = cand_bytes.get(metric)
+                if got is not None and got != want:
+                    msg = (f"[bytes] {name}/{metric}: {want} -> {got} "
+                           "(byte ledgers are exact under seed)")
+                    if bytes_exact:
+                        regressions.append(msg)
+                    else:
+                        print(f"WARNING {msg}")
             if row["us_per_call"] < min_us:
                 continue
             limit = threshold_for(name, threshold, overrides)
@@ -112,12 +144,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--min-us", type=float, default=100.0,
                     help="skip timing gates on rows whose baseline is "
                     "below this (default 100)")
+    ap.add_argument("--allow-bytes-drift", action="store_true",
+                    help="report byte-metric changes as warnings instead "
+                    "of regressions (for cross-version comparisons)")
     args = ap.parse_args(argv)
 
     baseline = load_dir(args.baseline)
     candidate = load_dir(args.candidate)
     regressions = compare(baseline, candidate, threshold=args.threshold,
-                          overrides=args.threshold_for, min_us=args.min_us)
+                          overrides=args.threshold_for, min_us=args.min_us,
+                          bytes_exact=not args.allow_bytes_drift)
     n_rows = sum(len(r["rows"]) for r in baseline.values())
     print(f"compared {len(baseline)} suites / {n_rows} rows: "
           f"{len(regressions)} regressions")

@@ -9,6 +9,11 @@ the tree exists at the repo root — so a doc can never silently go
 dangling again (EXPERIMENTS.md was cited for two PRs before it was
 written).
 
+It also cross-checks DESIGN.md Sec. 14 against the reprolint rule
+registry: every rule id documented there must exist in
+``tools.reprolint.rules.ALL_RULES`` and vice versa, so the invariant
+catalog and the enforcing code cannot drift apart.
+
 Exits non-zero with one line per broken reference.  Stdlib only.
 """
 from __future__ import annotations
@@ -18,6 +23,11 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
+# importable both as `python tools/check_docs.py` and `-m tools.check_docs`
+sys.path.insert(0, str(ROOT))
+
+# Sec. 14 documents each rule as a "**DET01 — title**" subsection.
+RULE_DOC_RE = re.compile(r"\*\*([A-Z]{3}\d{2}) —")
 SCAN_DIRS = ("src", "benchmarks", "tests", "examples", "tools")
 # Durable root docs also scanned for cross-references of their own.
 ROOT_MD_FILES = ("README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md",
@@ -97,6 +107,19 @@ def main() -> int:
                 n_refs += 1
                 if not (ROOT / m.group(1)).exists():
                     errors.append(f"{rel}: path {m.group(1)} does not exist")
+
+    # reprolint rule registry <-> DESIGN.md Sec. 14, both directions
+    from tools.reprolint.rules import RULE_IDS
+    sec14 = design.split("## Sec. 14", 1)
+    documented = set(RULE_DOC_RE.findall(sec14[1])) if len(sec14) == 2 else set()
+    registered = set(RULE_IDS)
+    n_refs += len(documented | registered)
+    for rid in sorted(registered - documented):
+        errors.append(f"DESIGN.md: reprolint rule {rid} is registered "
+                      "but not documented in Sec. 14")
+    for rid in sorted(documented - registered):
+        errors.append(f"DESIGN.md: Sec. 14 documents rule {rid}, which "
+                      "is not in tools.reprolint.rules.ALL_RULES")
 
     for line in errors:
         print(f"DANGLING: {line}", file=sys.stderr)

@@ -1,0 +1,13 @@
+"""reprolint — this repo's own static-analysis suite (DESIGN.md Sec. 14).
+
+Usage::
+
+    python -m tools.reprolint src tests benchmarks tools
+
+Public API: :func:`tools.reprolint.engine.scan_source`,
+:func:`tools.reprolint.engine.scan_paths`,
+:data:`tools.reprolint.rules.ALL_RULES`.
+"""
+from .engine import (Finding, load_baseline, main, scan_paths,  # noqa: F401
+                     scan_source)
+from .rules import ALL_RULES, RULE_IDS  # noqa: F401

@@ -1,0 +1,6 @@
+"""``python -m tools.reprolint`` entry point."""
+import sys
+
+from .engine import main
+
+sys.exit(main())

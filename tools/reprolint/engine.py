@@ -1,0 +1,371 @@
+"""The reprolint engine: scanning, suppression, baseline, reporting.
+
+reprolint is this repo's own static-analysis pass (DESIGN.md Sec. 14):
+a handful of AST rules, each born from a bug that actually shipped and
+had to be hand-hunted — layout-dependent contractions (PR 4), int32
+byte-ledger overflow (PR 4), wall-clock leaking into the simulated
+event clock (PR 8), host syncs inside the jitted scan core, recompile
+hazards on the jit cache keys.  Generic linters cannot know these
+contracts; this engine makes them mechanical.
+
+Design:
+
+* A **rule** (see rules/) is an object with an ``id``, a one-line
+  ``title``, and ``check(ctx) -> iterable[Finding]``.  Rules receive a
+  parsed :class:`FileContext` — AST plus source lines plus a parent
+  map — and never do their own I/O.
+
+* **Suppression** is per-line and must carry a reason::
+
+      eps = beta @ K @ beta  # reprolint: allow[DET01] oracle quadform
+
+  The comment may sit on the finding's line or alone on the line
+  above.  An allow comment WITHOUT a reason does not suppress and is
+  itself reported (rule id ``SUP00``), so suppressions stay auditable.
+
+* The **baseline** (``tools/reprolint/baseline.json``) grandfathers
+  known findings by fingerprint ``(rule, path, context, snippet)`` —
+  deliberately not by line number, so unrelated edits don't churn it.
+  Every entry carries a ``reason``.  A fresh finding not in the
+  baseline fails the run; a baseline entry no longer found is *stale*
+  and also fails (run ``--update-baseline`` after removing dead code).
+
+CLI (``python -m tools.reprolint``) exit codes: 0 clean, 1 new or
+stale findings, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parent.parent.parent
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+#: ``# reprolint: allow[DET01] reason`` / ``allow[DET01,CLK01] reason``
+_ALLOW_RE = re.compile(
+    r"#\s*reprolint:\s*allow\[([A-Z0-9,\s]+)\]\s*(.*)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one site."""
+
+    rule: str       # rule id, e.g. "DET01"
+    path: str       # repo-relative posix path
+    line: int       # 1-based
+    col: int        # 0-based
+    context: str    # dotted enclosing scope ("<module>" at top level)
+    snippet: str    # stripped source of the finding's line
+    message: str
+
+    def fingerprint(self) -> Tuple[str, str, str, str]:
+        """Baseline identity: stable across pure line moves."""
+        return (self.rule, self.path, self.context, self.snippet)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{self.context}] {self.message}")
+
+
+class FileContext:
+    """Everything a rule needs to know about one source file."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path                       # repo-relative posix
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self._parents[child] = node
+        # line -> (set of allowed rule ids, reason or "")
+        self.allows: Dict[int, Tuple[Set[str], str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = _ALLOW_RE.search(text)
+            if m:
+                ids = {s.strip() for s in m.group(1).split(",") if s.strip()}
+                self.allows[i] = (ids, m.group(2).strip())
+
+    # -- scope helpers -------------------------------------------------------
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(node)
+
+    def context_of(self, node: ast.AST) -> str:
+        """Dotted qualname of the enclosing defs/classes."""
+        parts: List[str] = []
+        cur = self._parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                parts.append(cur.name)
+            cur = self._parents.get(cur)
+        return ".".join(reversed(parts)) or "<module>"
+
+    def enclosing_function(self, node: ast.AST):
+        cur = self._parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = self._parents.get(cur)
+        return None
+
+    def snippet_at(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        return Finding(
+            rule=rule, path=self.path, line=line,
+            col=getattr(node, "col_offset", 0),
+            context=self.context_of(node),
+            snippet=self.snippet_at(line), message=message)
+
+    # -- suppression ---------------------------------------------------------
+
+    def allowed(self, finding: Finding) -> bool:
+        """True iff an allow comment WITH a reason covers the finding's
+        line (same line, or a comment-only line directly above)."""
+        for line in (finding.line, finding.line - 1):
+            entry = self.allows.get(line)
+            if entry is None:
+                continue
+            if line != finding.line and not self.snippet_at(
+                    line).startswith("#"):
+                continue   # the line above only counts when comment-only
+            ids, reason = entry
+            if finding.rule in ids and reason:
+                return True
+        return False
+
+    def unsupported_allows(self) -> Iterable[Finding]:
+        """``SUP00`` findings for allow comments with no reason — they
+        suppress nothing, which should be loud, not silent."""
+        for line, (ids, reason) in sorted(self.allows.items()):
+            if not reason:
+                yield Finding(
+                    rule="SUP00", path=self.path, line=line, col=0,
+                    context="<module>", snippet=self.snippet_at(line),
+                    message=("allow comment without a reason suppresses "
+                             f"nothing (rules {sorted(ids)}); write "
+                             "`# reprolint: allow[ID] why`"))
+
+
+# ---------------------------------------------------------------------------
+# Name-resolution helpers shared by rules
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def names_in(node: ast.AST) -> Set[str]:
+    """All bare identifier names referenced inside ``node``."""
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def contains_float_literal(node: ast.AST) -> Optional[ast.Constant]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, float):
+            return sub
+    return None
+
+
+def contains_true_division(node: ast.AST) -> Optional[ast.BinOp]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Div):
+            return sub
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineEntry:
+    rule: str
+    path: str
+    context: str
+    snippet: str
+    reason: str
+
+    def fingerprint(self) -> Tuple[str, str, str, str]:
+        return (self.rule, self.path, self.context, self.snippet)
+
+
+def load_baseline(path: Path) -> List[BaselineEntry]:
+    if not path.exists():
+        return []
+    doc = json.loads(path.read_text(encoding="utf-8"))
+    entries = []
+    for raw in doc.get("findings", []):
+        entries.append(BaselineEntry(
+            rule=raw["rule"], path=raw["path"], context=raw["context"],
+            snippet=raw["snippet"], reason=raw.get("reason", "")))
+    return entries
+
+
+def save_baseline(path: Path, findings: Sequence[Finding],
+                  reasons: Optional[Dict[Tuple, str]] = None) -> None:
+    """Serialize findings as the new baseline, carrying over reasons
+    for fingerprints that already had one."""
+    reasons = reasons or {}
+    doc = {
+        "comment": ("reprolint grandfathered findings — every entry needs "
+                    "a reason; regenerate with --update-baseline"),
+        "findings": [
+            {
+                "rule": f.rule, "path": f.path, "context": f.context,
+                "snippet": f.snippet,
+                "reason": reasons.get(f.fingerprint(),
+                                      "grandfathered (add a real reason)"),
+            }
+            for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+        ],
+    }
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n",
+                    encoding="utf-8")
+
+
+# ---------------------------------------------------------------------------
+# Scanning
+# ---------------------------------------------------------------------------
+
+
+def iter_py_files(paths: Sequence[str], root: Path) -> Iterable[Path]:
+    for p in paths:
+        full = (root / p) if not Path(p).is_absolute() else Path(p)
+        if full.is_file() and full.suffix == ".py":
+            yield full
+        elif full.is_dir():
+            yield from sorted(full.rglob("*.py"))
+
+
+def scan_source(source: str, path: str, rules: Sequence) -> List[Finding]:
+    """Run ``rules`` over one in-memory source file; returns the
+    *unsuppressed* findings (allow comments already applied) plus any
+    SUP00 reason-less-allow findings."""
+    ctx = FileContext(path, source)
+    out: List[Finding] = []
+    seen: Set[Tuple[str, int, int]] = set()
+    for rule in rules:
+        if not rule.applies_to(path):
+            continue
+        for f in rule.check(ctx):
+            # nested expressions (`a @ b @ c`) can hit one site twice;
+            # one finding per (rule, line, col) is enough to fix it
+            key = (f.rule, f.line, f.col)
+            if key in seen or ctx.allowed(f):
+                continue
+            seen.add(key)
+            out.append(f)
+    out.extend(ctx.unsupported_allows())
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out
+
+
+def scan_paths(paths: Sequence[str], rules: Sequence,
+               root: Path = REPO_ROOT) -> List[Finding]:
+    findings: List[Finding] = []
+    for file in iter_py_files(paths, root):
+        resolved = file.resolve()
+        try:
+            rel = resolved.relative_to(root.resolve()).as_posix()
+        except ValueError:   # scanning outside the repo (tests, tmp dirs)
+            rel = resolved.as_posix()
+        try:
+            source = file.read_text(encoding="utf-8")
+            findings.extend(scan_source(source, rel, rules))
+        except SyntaxError as exc:
+            findings.append(Finding(
+                rule="SUP00", path=rel, line=exc.lineno or 1, col=0,
+                context="<module>", snippet="",
+                message=f"file does not parse: {exc.msg}"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    from .rules import ALL_RULES  # late import: rules import this module
+
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="repo-specific static analysis "
+                    "(determinism / clock / jit / byte-ledger invariants)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to scan (repo-relative)")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="baseline JSON of grandfathered findings")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from this scan "
+                         "(carries over existing reasons)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the active rules and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.id}  {rule.title}")
+        return 0
+    if not args.paths:
+        ap.error("no paths to scan")
+
+    findings = scan_paths(args.paths, ALL_RULES)
+
+    baseline_path = Path(args.baseline)
+    entries = [] if args.no_baseline else load_baseline(baseline_path)
+    known = {e.fingerprint(): e for e in entries}
+
+    if args.update_baseline:
+        save_baseline(baseline_path, findings,
+                      {fp: e.reason for fp, e in known.items()})
+        print(f"reprolint: baseline rewritten with {len(findings)} "
+              f"findings -> {baseline_path}")
+        return 0
+
+    seen = {f.fingerprint() for f in findings}
+    new = [f for f in findings if f.fingerprint() not in known]
+    stale = [e for e in entries if e.fingerprint() not in seen]
+
+    for f in new:
+        print(f.render(), file=sys.stderr)
+    for e in stale:
+        print(f"{e.path}: STALE baseline entry {e.rule} [{e.context}] "
+              f"{e.snippet!r} — the code changed; run --update-baseline",
+              file=sys.stderr)
+
+    n_files = len(set(f.path for f in findings)) if findings else 0
+    print(f"reprolint: {len(findings)} findings "
+          f"({len(findings) - len(new)} baselined in {n_files} files), "
+          f"{len(new)} new, {len(stale)} stale")
+    return 1 if (new or stale) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

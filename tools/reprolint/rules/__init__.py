@@ -1,0 +1,49 @@
+"""reprolint rule registry.
+
+A rule is a tiny object: an ``id`` (stable, referenced by allow
+comments, the baseline, and DESIGN.md Sec. 14), a one-line ``title``,
+an ``applies_to(path)`` scope predicate, and ``check(ctx)`` yielding
+:class:`~tools.reprolint.engine.Finding`s.  Rules never read files —
+the engine hands them a parsed :class:`FileContext`.
+
+Writing a new rule (see DESIGN.md Sec. 14 for the how-to):
+
+1. Add ``rules/xyz01.py`` with a ``Rule`` subclass; keep detection
+   name-based and syntactic — reprolint has no type information, so
+   prefer precise scopes + allow-comments over clever inference.
+2. Import and append it to :data:`ALL_RULES` below.
+3. Add a golden positive + negative snippet to tests/test_reprolint.py
+   and a DESIGN.md Sec. 14 subsection naming the bug that motivated it
+   (tools/check_docs.py cross-checks the doc against this registry).
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+
+class Rule:
+    """Base class; subclasses set ``id``/``title`` and implement
+    ``check``.  ``applies_to`` defaults to every scanned file."""
+
+    id: str = "XXX00"
+    title: str = ""
+
+    def applies_to(self, path: str) -> bool:
+        return True
+
+    def check(self, ctx) -> Iterable:
+        raise NotImplementedError
+
+
+from .det01 import Det01  # noqa: E402
+from .clk01 import Clk01  # noqa: E402
+from .jit01 import Jit01  # noqa: E402
+from .acc01 import Acc01  # noqa: E402
+from .rec01 import Rec01  # noqa: E402
+
+#: Active rules, id-sorted.  check_docs.py verifies DESIGN.md Sec. 14
+#: documents exactly these ids.
+ALL_RULES: List[Rule] = sorted(
+    [Acc01(), Clk01(), Det01(), Jit01(), Rec01()], key=lambda r: r.id)
+
+RULE_IDS = [r.id for r in ALL_RULES]

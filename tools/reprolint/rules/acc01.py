@@ -1,0 +1,126 @@
+"""ACC01 — float contamination of the integer-exact byte ledger.
+
+The Sec. 3 byte accounting is integer-exact by contract: every
+``*_bytes`` quantity is an int (Python int or int64 on device), the
+criterion bound comparisons are exact integer comparisons, and the
+one deliberate int32 site (``accounting.device_sync_bytes_kernel``)
+carries an overflow guard — PR 4 shipped exactly this overflow, and
+PR 6's live monitor only works because bytes never pass through
+floats.  This rule flags:
+
+* arithmetic mixing a ``*bytes*`` identifier with a float literal;
+* comparisons where one side mentions a ``*bytes*`` identifier and
+  the other contains a float literal or a true division (``/``) —
+  the classic ``total_bytes <= bound + 1e-9`` slop pattern;
+* assignments to a ``*bytes*`` name whose value contains a float
+  literal or a true division (use ``//`` on the ledger);
+* ``float(...)`` applied to a ``*bytes*`` expression;
+* ``int32`` dtypes referenced inside functions whose name contains
+  ``bytes`` (the PR 4 overflow shape) — guarded sites carry an
+  inline allow.
+"""
+from __future__ import annotations
+
+import re
+from typing import Iterable, List
+
+import ast
+
+from ..engine import (FileContext, Finding, contains_float_literal,
+                      contains_true_division, dotted_name)
+from . import Rule
+
+BYTES_NAME = re.compile(r"(^|_)bytes($|_)|bytes$", re.IGNORECASE)
+INT32_NAMES = frozenset({"jnp.int32", "np.int32", "numpy.int32",
+                         "jax.numpy.int32"})
+
+
+def mentions_bytes(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and BYTES_NAME.search(sub.id):
+            return True
+        if isinstance(sub, ast.Attribute) and BYTES_NAME.search(sub.attr):
+            return True
+    return False
+
+
+def _float_taint(node: ast.AST) -> str:
+    """Why ``node`` is float-valued, or '' if it isn't (syntactically)."""
+    if contains_float_literal(node) is not None:
+        return "a float literal"
+    if contains_true_division(node) is not None:
+        return "a true division (use // on the ledger)"
+    return ""
+
+
+class Acc01(Rule):
+    id = "ACC01"
+    title = ("float arithmetic / comparison slop / int32 accumulation "
+             "on the integer-exact byte ledger")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.BinOp) and isinstance(
+                    node.op, (ast.Add, ast.Sub, ast.Mult, ast.Div)):
+                sides = [node.left, node.right]
+                if any(mentions_bytes(s) for s in sides):
+                    why = _float_taint(node)
+                    if why:
+                        out.append(ctx.finding(
+                            self.id, node,
+                            "byte-ledger arithmetic mixes in "
+                            f"{why}; the Sec. 3 ledger is integer-exact "
+                            "(DESIGN.md Sec. 7, PR 4)"))
+            elif isinstance(node, ast.Compare):
+                sides = [node.left] + list(node.comparators)
+                if any(mentions_bytes(s) for s in sides):
+                    tainted = next(
+                        (s for s in sides
+                         if not mentions_bytes(s) and _float_taint(s)), None)
+                    if tainted is not None:
+                        out.append(ctx.finding(
+                            self.id, node,
+                            "byte-ledger comparison against "
+                            f"{_float_taint(tainted)}; byte bounds compare "
+                            "integer-exact, no epsilon slop "
+                            "(DESIGN.md Sec. 7, PR 4)"))
+            elif isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                value = node.value
+                if value is None:
+                    continue
+                if any(mentions_bytes(t) for t in targets):
+                    why = _float_taint(value)
+                    if why:
+                        out.append(ctx.finding(
+                            self.id, node,
+                            f"assignment to a byte-ledger name from {why}; "
+                            "keep *_bytes values integral "
+                            "(DESIGN.md Sec. 7)"))
+            elif isinstance(node, ast.Call):
+                fname = dotted_name(node.func)
+                if (fname == "float" and node.args
+                        and mentions_bytes(node.args[0])):
+                    out.append(ctx.finding(
+                        self.id, node,
+                        "`float()` on a byte-ledger value loses "
+                        "integer-exactness above 2**53; keep bytes "
+                        "integral (DESIGN.md Sec. 7)"))
+
+        # int32 accumulation inside *bytes* functions (PR 4 overflow)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if "bytes" not in node.name:
+                continue
+            for sub in ast.walk(node):
+                if (isinstance(sub, (ast.Attribute, ast.Name))
+                        and dotted_name(sub) in INT32_NAMES):
+                    out.append(ctx.finding(
+                        self.id, sub,
+                        f"int32 in byte-ledger function `{node.name}` — "
+                        "the PR 4 overflow shape; use int64 or prove a "
+                        "bound and allow with the guard as the reason"))
+        return out

@@ -1,0 +1,95 @@
+"""CLK01 — wall-clock time and unseeded randomness where the
+simulated clock owns time.
+
+The runtime, the serving engine, and the trace layer all promise that
+a run is a pure function of its seeds: the discrete-event
+``runtime.clock.Clock`` is the only source of time, and every random
+draw comes from a ``np.random.Generator`` seeded through
+``SeedSequence([seed, tag])`` (DESIGN.md Sec. 7; PR 8's float-grid
+tick drift is what happens when wall-clock sneaks in).  This rule bans:
+
+* wall-clock reads (``time.time``, ``datetime.now``, ...) inside the
+  clock-owned modules — ``time.perf_counter`` stays legal because
+  measuring *real* latency of a host call is not simulated time;
+* global-state randomness (``np.random.rand`` and friends, stdlib
+  ``random.*`` module functions) anywhere in the repo — the seeded
+  ``default_rng`` / ``SeedSequence`` / ``Generator`` constructors and
+  method calls on generator objects are untouched.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+import ast
+
+from ..engine import FileContext, Finding, dotted_name
+from . import Rule
+
+#: Modules where the simulated Clock owns time.
+CLOCK_SCOPE = (
+    "repro/runtime/",
+    "repro/serving/",
+    "repro/telemetry/trace.py",
+)
+
+WALL_CLOCK = frozenset({
+    "time.time", "time.time_ns", "time.localtime", "time.gmtime",
+    "time.ctime", "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+})
+
+#: np.random constructors that are fine: they make *seeded* objects.
+NP_RANDOM_OK = frozenset({
+    "default_rng", "SeedSequence", "Generator", "PCG64", "Philox",
+    "BitGenerator",
+})
+
+#: stdlib random module-level functions (global Mersenne state).
+#: ``random.Random(seed)`` instances are deliberately not banned.
+STDLIB_RANDOM = frozenset({
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "normalvariate", "seed", "betavariate",
+    "expovariate", "getrandbits", "random.random",
+})
+
+
+class Clk01(Rule):
+    id = "CLK01"
+    title = ("wall-clock read in a simulated-clock module, or "
+             "global-state randomness")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        in_clock_scope = any(frag in ctx.path for frag in CLOCK_SCOPE)
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name is None:
+                continue
+            if in_clock_scope and name in WALL_CLOCK:
+                out.append(ctx.finding(
+                    self.id, node,
+                    f"`{name}()` reads the wall clock, but the simulated "
+                    "Clock owns time here; use Clock.now for simulated "
+                    "time or time.perf_counter for real durations "
+                    "(DESIGN.md Sec. 6, PR 8)"))
+                continue
+            if name.startswith(("np.random.", "numpy.random.")):
+                leaf = name.rsplit(".", 1)[1]
+                if leaf not in NP_RANDOM_OK:
+                    out.append(ctx.finding(
+                        self.id, node,
+                        f"`{name}()` draws from numpy's global RNG state; "
+                        "thread a seeded np.random.default_rng(...) "
+                        "Generator instead (DESIGN.md Sec. 6)"))
+            elif name.startswith("random."):
+                leaf = name.split(".", 1)[1]
+                if leaf in STDLIB_RANDOM:
+                    out.append(ctx.finding(
+                        self.id, node,
+                        f"`{name}()` uses the global Mersenne state; use a "
+                        "seeded np.random.default_rng(...) Generator "
+                        "(DESIGN.md Sec. 6)"))
+        return out

@@ -1,0 +1,70 @@
+"""DET01 — layout-dependent contractions in bitwise-contract modules.
+
+PR 4's driver-parity hunt (DESIGN.md Sec. 9): XLA lowers ``@`` /
+``jnp.dot`` / ``jnp.matmul`` to gemm/gemv whose accumulation order
+depends on operand shapes, so the same mathematical contraction
+produces different low bits when the row count changes (batched vs
+row-at-a-time, sharded vs single-device).  Every contraction on the
+loss-feeding path must therefore be written as an explicit
+multiply + last-axis ``jnp.sum`` — a fixed reduction order regardless
+of layout.  This rule bans the layout-dependent spellings inside the
+modules under the bitwise contract; documented pure-jnp oracles carry
+inline allows.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+import ast
+
+from ..engine import FileContext, Finding, dotted_name
+from . import Rule
+
+#: Path fragments under the bitwise-reproducibility contract.
+SCOPE = (
+    "repro/core/",
+    "repro/runtime/",
+    "repro/serving/",
+    "repro/telemetry/monitor.py",
+    "repro/kernels/ref.py",
+)
+
+#: Contraction callables whose accumulation order is layout-dependent.
+BANNED_FUNCS = frozenset({
+    "dot", "matmul", "einsum", "vdot", "inner", "tensordot",
+})
+BANNED_BASES = frozenset({"jnp", "np", "numpy", "jax.numpy"})
+BANNED_DOTTED = frozenset({"lax.dot_general", "jax.lax.dot_general"})
+
+
+class Det01(Rule):
+    id = "DET01"
+    title = ("layout-dependent contraction (@ / jnp.dot / matmul / "
+             "einsum) in a bitwise-contract module")
+
+    def applies_to(self, path: str) -> bool:
+        return any(frag in path for frag in SCOPE)
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.BinOp) and isinstance(
+                    node.op, ast.MatMult):
+                out.append(ctx.finding(
+                    self.id, node,
+                    "`@` lowers to a gemm whose accumulation order is "
+                    "layout-dependent; write explicit multiply + "
+                    "last-axis reduce (DESIGN.md Sec. 9, PR 4)"))
+            elif isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name is None:
+                    continue
+                base, _, leaf = name.rpartition(".")
+                if (name in BANNED_DOTTED
+                        or (leaf in BANNED_FUNCS and base in BANNED_BASES)):
+                    out.append(ctx.finding(
+                        self.id, node,
+                        f"`{name}` is a layout-dependent contraction; "
+                        "write explicit multiply + last-axis reduce "
+                        "(DESIGN.md Sec. 9, PR 4)"))
+        return out

@@ -1,0 +1,169 @@
+"""JIT01 — host syncs and impure calls inside jit-traced code.
+
+The generic scan core (core/engine.py) traces one step function per
+(substrate, protocol) pair and reuses it for every driver; a host
+sync inside that trace either fails at trace time
+(``ConcretizationTypeError`` from ``int()``/``float()`` on a tracer),
+silently materializes on the host (``np.asarray``), or defeats async
+dispatch (``block_until_ready``, ``print``).  The node face of a
+Substrate is host-side by design and uses numpy freely — so this rule
+is scoped to the *jit roots*:
+
+* functions decorated with ``jax.jit`` (or ``partial(jax.jit, ...)``);
+* function defs referenced by a ``jax.jit`` / ``lax.scan`` /
+  ``lax.cond`` / ``lax.while_loop`` / ``lax.fori_loop`` call in the
+  same file (the scan-core step builders);
+* the scan-face methods of ``*Substrate`` classes (the set the engine
+  traces; the node face — ``update_one``, ``upload_payload``,
+  ``snapshot_buffers``, ... — is deliberately NOT here);
+* any function nested inside one of the above.
+
+Detection is syntactic and file-local (no cross-file call graph):
+banned calls are flagged anywhere in a root's body; ``float()`` /
+``int()`` only when their argument mentions a parameter of the root
+(a traced name), so trace-time casts of static config stay legal.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Set
+
+import ast
+
+from ..engine import FileContext, Finding, dotted_name, names_in
+from . import Rule
+
+JIT_NAMES = frozenset({"jax.jit", "jit"})
+PARTIAL_NAMES = frozenset({"functools.partial", "partial"})
+LAX_HOFS = frozenset({
+    "lax.scan", "jax.lax.scan", "lax.cond", "jax.lax.cond",
+    "lax.while_loop", "jax.lax.while_loop",
+    "lax.fori_loop", "jax.lax.fori_loop", "lax.map", "jax.lax.map",
+})
+
+#: Methods the engine traces on every Substrate (the scan face,
+#: DESIGN.md Sec. 8).  Keep in sync with core/substrate.py.
+SCAN_FACE = frozenset({
+    "predict", "predict_batch", "update", "round_stacked",
+    "average_stacked", "adopt", "dist_to_ref", "dist_to_ref_each",
+    "divergence", "sync_payload", "models_of", "with_models",
+})
+
+BANNED_CALLS = frozenset({
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+})
+BANNED_METHODS = frozenset({"item", "block_until_ready", "tolist"})
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """True for ``jax.jit``, ``jit``, ``partial(jax.jit, ...)`` and
+    ``jax.jit(...)`` / ``partial(...)`` call forms."""
+    name = dotted_name(node)
+    if name in JIT_NAMES:
+        return True
+    if isinstance(node, ast.Call):
+        fname = dotted_name(node.func)
+        if fname in JIT_NAMES:
+            return True
+        if fname in PARTIAL_NAMES and node.args:
+            return _is_jit_expr(node.args[0])
+    return False
+
+
+class Jit01(Rule):
+    id = "JIT01"
+    title = ("host sync / impure call inside a jit-traced function "
+             "(scan core or Substrate scan face)")
+
+    def applies_to(self, path: str) -> bool:
+        return "repro/" in path
+
+    # -- root discovery ------------------------------------------------------
+
+    def _roots(self, ctx: FileContext) -> List[ast.AST]:
+        roots: List[ast.AST] = []
+        defs_by_name = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs_by_name.setdefault(node.name, []).append(node)
+                if any(_is_jit_expr(d) for d in node.decorator_list):
+                    roots.append(node)
+
+        # names referenced by jit()/lax.scan()/... calls in this file
+        referenced: Set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = dotted_name(node.func)
+            if fname in JIT_NAMES or fname in LAX_HOFS:
+                for arg in node.args:
+                    if isinstance(arg, ast.Name):
+                        referenced.add(arg.id)
+            elif fname in PARTIAL_NAMES and node.args:
+                if _is_jit_expr(node.args[0]):
+                    for arg in node.args[1:]:
+                        if isinstance(arg, ast.Name):
+                            referenced.add(arg.id)
+        for name in referenced:
+            roots.extend(defs_by_name.get(name, []))
+
+        # scan-face methods of Substrate classes
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            base_names = {dotted_name(b) or "" for b in node.bases}
+            is_sub = (node.name.endswith("Substrate")
+                      or any(b.endswith("Substrate") for b in base_names))
+            if not is_sub:
+                continue
+            for item in node.body:
+                if (isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and item.name in SCAN_FACE):
+                    roots.append(item)
+
+        return roots
+
+    # -- body checks ---------------------------------------------------------
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        seen: Set[int] = set()
+        for root in self._roots(ctx):
+            if id(root) in seen:
+                continue
+            seen.add(id(root))
+            params = {a.arg for a in (root.args.posonlyargs + root.args.args
+                                      + root.args.kwonlyargs)} - {"self"}
+            if root.args.vararg:
+                params.add(root.args.vararg.arg)
+            for node in ast.walk(root):
+                if not isinstance(node, ast.Call):
+                    continue
+                fname = dotted_name(node.func)
+                where = f"jit-traced `{root.name}`"
+                if fname in BANNED_CALLS:
+                    out.append(ctx.finding(
+                        self.id, node,
+                        f"`{fname}` inside {where} forces a host "
+                        "materialization; stay in jnp (DESIGN.md Sec. 8)"))
+                elif (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in BANNED_METHODS
+                        and not node.args and not node.keywords):
+                    out.append(ctx.finding(
+                        self.id, node,
+                        f"`.{node.func.attr}()` inside {where} is a "
+                        "device->host sync; keep values traced "
+                        "(DESIGN.md Sec. 8)"))
+                elif fname == "print":
+                    out.append(ctx.finding(
+                        self.id, node,
+                        f"`print` inside {where} runs at trace time only "
+                        "(or syncs via callbacks); use "
+                        "jax.debug.print if needed (DESIGN.md Sec. 8)"))
+                elif fname in ("float", "int", "bool") and node.args:
+                    if names_in(node.args[0]) & params:
+                        out.append(ctx.finding(
+                            self.id, node,
+                            f"`{fname}()` on a traced argument of {where} "
+                            "raises ConcretizationTypeError under jit; "
+                            "use .astype / lax ops (DESIGN.md Sec. 8)"))
+        return out

@@ -1,0 +1,136 @@
+"""REC01 — recompile hazards on jit cache keys.
+
+The engine caches one compiled step per substrate/protocol pair
+(``core/engine.py``'s ``_jitted`` lru_cache) and keys it on frozen
+dataclasses; serving reuses the same cache across requests.  Two
+mechanical ways to break that (both produce silent recompiles, which
+the CompileCounter tests then chase for hours):
+
+* a *frozen* dataclass — i.e. one meant to be hashable and used as a
+  cache key — with an unhashable field: a ``default_factory`` of
+  ``list``/``dict``/``set``, or a field annotated with a mutable
+  container type.  ``hash()`` raises at first use, or worse, an
+  ``eq=False`` fallback keys the cache on object identity and every
+  fresh instance recompiles;
+* a dict/list/set literal passed positionally to a jitted entry point
+  (a name bound to ``jax.jit(...)`` or ``partial(jax.jit, ...)``):
+  each literal is a fresh pytree container whose *structure* is the
+  cache key part, but mutating it between calls (the usual reason to
+  pass one) changes leaves without changing identity — and a set is
+  not a pytree at all.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Set
+
+import ast
+
+from ..engine import FileContext, Finding, dotted_name
+from . import Rule
+from .jit01 import _is_jit_expr
+
+MUTABLE_FACTORIES = frozenset({"list", "dict", "set", "bytearray"})
+MUTABLE_ANNOTATIONS = frozenset({
+    "list", "dict", "set", "List", "Dict", "Set", "MutableMapping",
+    "DefaultDict", "bytearray",
+})
+
+
+def _dataclass_frozen(node: ast.ClassDef) -> bool:
+    """True iff decorated ``@dataclass(frozen=True)`` (any spelling of
+    the dataclass decorator)."""
+    for dec in node.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        if dotted_name(dec.func) not in ("dataclass", "dataclasses.dataclass"):
+            continue
+        for kw in dec.keywords:
+            if (kw.arg == "frozen" and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True):
+                return True
+    return False
+
+
+def _annotation_names(node: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            out.add(sub.id)
+        elif isinstance(sub, ast.Attribute):
+            out.add(sub.attr)
+        elif isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            # string annotations ("List[int]") — take the head symbol
+            out.add(sub.value.split("[", 1)[0].strip())
+    return out
+
+
+class Rec01(Rule):
+    id = "REC01"
+    title = ("recompile hazard: unhashable field on a frozen (jit-key) "
+             "dataclass, or mutable literal passed to a jitted entry")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+
+        # 1. frozen dataclasses with unhashable fields
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.ClassDef)
+                    and _dataclass_frozen(node)):
+                continue
+            for item in node.body:
+                if not isinstance(item, ast.AnnAssign):
+                    continue
+                if (isinstance(item.value, ast.Call)
+                        and dotted_name(item.value.func)
+                        in ("field", "dataclasses.field")):
+                    for kw in item.value.keywords:
+                        if (kw.arg == "default_factory"
+                                and dotted_name(kw.value)
+                                in MUTABLE_FACTORIES):
+                            out.append(ctx.finding(
+                                self.id, item,
+                                f"frozen dataclass `{node.name}` has a "
+                                f"mutable default_factory "
+                                f"`{dotted_name(kw.value)}`; frozen "
+                                "dataclasses key the jit cache and must "
+                                "stay hashable (DESIGN.md Sec. 8)"))
+                if item.annotation is not None:
+                    bad = _annotation_names(item.annotation) \
+                        & MUTABLE_ANNOTATIONS
+                    if bad:
+                        out.append(ctx.finding(
+                            self.id, item,
+                            f"frozen dataclass `{node.name}` field "
+                            f"annotated with unhashable {sorted(bad)}; "
+                            "hash() will raise when it keys the jit "
+                            "cache — use a tuple/frozen type "
+                            "(DESIGN.md Sec. 8)"))
+
+        # 2. mutable literals passed to jitted entry points
+        jitted_names: Set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) and isinstance(
+                    node.value, ast.Call) and _is_jit_expr(node.value):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        jitted_names.add(tgt.id)
+                    elif isinstance(tgt, ast.Attribute):
+                        jitted_names.add(tgt.attr)
+        if jitted_names:
+            for node in ast.walk(ctx.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                fname = dotted_name(node.func)
+                leaf = fname.rpartition(".")[2] if fname else None
+                if leaf not in jitted_names:
+                    continue
+                for arg in node.args:
+                    if isinstance(arg, (ast.Dict, ast.List, ast.Set)):
+                        kind = type(arg).__name__.lower()
+                        out.append(ctx.finding(
+                            self.id, arg,
+                            f"{kind} literal passed to jitted entry "
+                            f"`{leaf}`; fresh mutable containers defeat "
+                            "the jit cache (and sets aren't pytrees) — "
+                            "pass arrays/tuples (DESIGN.md Sec. 8)"))
+        return out
