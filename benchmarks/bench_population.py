@@ -1,0 +1,221 @@
+"""Population-scale runs: 10^5-10^6 simulated learners with churn and
+partial participation (DESIGN.md Sec. 15, EXPERIMENTS.md §Population).
+
+The population layer's whole value is measured here: loss vs Sec. 3
+bytes as the coordinator's sampling rate sweeps the cohort, at learner
+counts far beyond the per-process worlds of the other suites.  Primal
+substrates only (the SV device ledger's int32 envelope refuses these
+scales by design — ``accounting.device_sync_bytes_kernel``); the
+paper's Sec. 4 fixed-size-model proposal is exactly what makes the
+byte column integer-exact at 10^5 learners.
+
+Registered claims (asserted here, grepped by CI):
+
+- ``full_participation_identical`` — the masked scan core under an
+  all-True mask reproduces ``engine.run`` BIT-FOR-BIT (losses, errors,
+  bytes, sync rounds).  The oracle contract the whole layer rides on.
+- ``bytes_scale_with_cohort`` — per sampling rate, the run's byte
+  column equals the closed-form Sec. 3 oracle priced from (mask, sync
+  decisions) alone — ``2 c_t |theta| B`` per sync plus ``|theta| B``
+  per rejoiner — and total bytes increase strictly with the rate under
+  a fixed periodic schedule.
+- ``criterion_integer_exact`` — the Def. 1 monitor adopts the cohort
+  ledger's byte series integer-exactly at every sampling rate
+  (``monitor_population`` prices the bound at the largest cohort).
+
+With >= 2 visible devices (the CI population step forces 8 host
+devices) the rate-0.5 run also executes mesh-sharded and must match
+the single-device run bitwise (``mesh_population_identical``).
+
+The us_per_call column is per-round wall time of the warmed masked
+engine at the row's population size.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import engine
+from repro.core.learners import LearnerConfig
+from repro.core.protocol import ProtocolConfig
+from repro.core.substrate import substrate_of
+from repro.data import separable_stream
+from repro.population import (ALWAYS_ON, PopulationSpec, rejoin_counts,
+                              run_population)
+from repro.telemetry.monitor import monitor_population
+
+from .common import Row
+
+D = 4
+RATES = (0.1, 0.5, 1.0)
+
+
+def _lcfg():
+    return LearnerConfig(algo="linear_sgd", loss="hinge", eta=0.1,
+                         lam=0.001, dim=D)
+
+
+def _oracle_cumulative_bytes(res, mask, num_params):
+    """Closed-form Sec. 3 byte column from (mask, sync decisions):
+    every rejoiner downloads |theta| B, every sync moves
+    2 c_t |theta| B over the coordinator links."""
+    T = mask.shape[0]
+    sync_set = {int(t) for t in np.asarray(res.sync_rounds)}
+    r = rejoin_counts(mask)
+    c = mask.sum(axis=1).astype(np.int64)
+    per = np.zeros(T, np.int64)
+    for t in range(T):
+        per[t] = int(r[t]) * num_params * 4
+        if t in sync_set:
+            per[t] += 2 * int(c[t]) * num_params * 4
+    return np.cumsum(per)
+
+
+def _full_participation_claim(rows):
+    """Small-population bitwise parity: all-True mask == engine.run."""
+    T, m = 40, 8
+    X, Y = separable_stream(T=T, m=m, d=D, seed=1, margin=0.5)
+    pcfg = ProtocolConfig(kind="dynamic", delta=0.5)
+    oracle = engine.run(_lcfg(), pcfg, X, Y)
+    pres = run_population(
+        PopulationSpec(m_total=m, classes=((ALWAYS_ON, 1.0),)),
+        _lcfg(), pcfg, X, Y)
+    identical = bool(
+        np.asarray(oracle.cumulative_loss).tobytes()
+        == np.asarray(pres.sim.cumulative_loss).tobytes()
+        and np.asarray(oracle.cumulative_errors).tobytes()
+        == np.asarray(pres.sim.cumulative_errors).tobytes()
+        and np.array_equal(oracle.cumulative_bytes,
+                           pres.sim.cumulative_bytes)
+        and np.array_equal(oracle.sync_rounds, pres.sim.sync_rounds))
+    assert identical, "masked scan core diverged from engine.run"
+    assert oracle.num_syncs > 0
+    rows.append(Row(
+        "population/claims", 0.0,
+        f"syncs={oracle.num_syncs};"
+        f"full_participation_identical={identical}"))
+
+
+def _mesh_or_none(m_total):
+    import jax
+
+    if len(jax.devices()) < 2 or m_total % len(jax.devices()):
+        return None
+    from repro.launch.mesh import make_learner_mesh
+    return make_learner_mesh()
+
+
+def run(quick: bool = False):
+    rows = []
+    _full_participation_claim(rows)
+
+    m_total = 100_000
+    T = 12 if quick else 40
+    num_params = substrate_of(_lcfg()).num_params
+    X, Y = separable_stream(T=T, m=m_total, d=D, seed=0, margin=0.5)
+    pcfg = ProtocolConfig(kind="periodic", period=3)
+
+    totals = {}
+    scale_ok = True
+    exact_ok = True
+    for rate in RATES:
+        spec = PopulationSpec(m_total=m_total,
+                              classes=((ALWAYS_ON, 1.0),),
+                              sample_rate=rate, seed=7)
+        pres = run_population(spec, _lcfg(), pcfg, X, Y)
+        t0 = time.perf_counter()
+        pres = run_population(spec, _lcfg(), pcfg, X, Y)   # warm
+        us = (time.perf_counter() - t0) * 1e6 / T
+        want = _oracle_cumulative_bytes(pres.sim, pres.participation,
+                                        num_params)
+        exact = bool(np.array_equal(
+            np.asarray(pres.sim.cumulative_bytes, np.int64), want))
+        exact_ok = exact_ok and exact
+        totals[rate] = pres.sim.total_bytes
+        mon = monitor_population(pres, _lcfg())
+        mon_exact = bool(np.array_equal(
+            mon.series().cumulative_bytes,
+            np.asarray(pres.sim.cumulative_bytes, np.int64)))
+        exact_ok = exact_ok and mon_exact
+        rows.append(Row(
+            f"population/rate{rate}", us,
+            f"m={m_total};cohort={int(pres.cohort_sizes.max())};"
+            f"errors={int(pres.sim.cumulative_errors[-1])};"
+            f"bytes={pres.sim.total_bytes};syncs={pres.sim.num_syncs};"
+            f"criterion_integer_exact={mon_exact};"
+            f"monitor_ok={'true' if mon.ok else 'false'}"))
+    scale_ok = bool(totals[0.1] < totals[0.5] < totals[1.0])
+    assert exact_ok, "cohort byte column diverged from the Sec. 3 oracle"
+    assert scale_ok, f"bytes not monotone in sampling rate: {totals}"
+    rows.append(Row(
+        "population/scaling", 0.0,
+        ";".join(f"bytes@{r}={totals[r]}" for r in RATES)
+        + f";bytes_scale_with_cohort={scale_ok and exact_ok}"))
+
+    # churny mix: phones drop and recover; rejoin downloads are charged
+    spec = PopulationSpec(m_total=m_total, sample_rate=0.8, seed=3)
+    pres = run_population(spec, _lcfg(),
+                          ProtocolConfig(kind="dynamic", delta=200.0), X, Y)
+    want = _oracle_cumulative_bytes(pres.sim, pres.participation, num_params)
+    churn_exact = bool(np.array_equal(
+        np.asarray(pres.sim.cumulative_bytes, np.int64), want))
+    assert churn_exact and pres.total_rejoins > 0
+    rows.append(Row(
+        "population/churn_dynamic", 0.0,
+        f"m={m_total};mean_cohort={pres.mean_cohort:.0f};"
+        f"rejoins={pres.total_rejoins};bytes={pres.sim.total_bytes};"
+        f"syncs={pres.sim.num_syncs};"
+        f"rejoin_bytes_exact={churn_exact}"))
+
+    # mesh-sharded half (CI forces 8 host devices for this suite)
+    mesh = _mesh_or_none(m_total)
+    if mesh is not None:
+        spec = PopulationSpec(m_total=m_total,
+                              classes=((ALWAYS_ON, 1.0),),
+                              sample_rate=0.5, seed=7)
+        p1 = run_population(spec, _lcfg(), pcfg, X, Y)
+        p8 = run_population(spec, _lcfg(), pcfg, X, Y, mesh=mesh)
+        same = bool(
+            np.asarray(p1.sim.cumulative_loss).tobytes()
+            == np.asarray(p8.sim.cumulative_loss).tobytes()
+            and np.array_equal(p1.sim.cumulative_bytes,
+                               p8.sim.cumulative_bytes)
+            and np.array_equal(p1.sim.sync_rounds, p8.sim.sync_rounds))
+        assert same, "mesh-sharded population diverged"
+        rows.append(Row(
+            "population/mesh/claims", 0.0,
+            f"devices={len(mesh.devices.flat)};"
+            f"mesh_population_identical={same}"))
+
+    if not quick:
+        # one 10^6-learner round trip: the memory-bound upper end
+        m_big = 1_000_000
+        Tb = 6
+        Xb, Yb = separable_stream(T=Tb, m=m_big, d=D, seed=0, margin=0.5)
+        spec = PopulationSpec(m_total=m_big, classes=((ALWAYS_ON, 1.0),),
+                              sample_rate=0.2, seed=7)
+        pres = run_population(spec, _lcfg(),
+                              ProtocolConfig(kind="periodic", period=2),
+                              Xb, Yb)
+        t0 = time.perf_counter()
+        pres = run_population(spec, _lcfg(),
+                              ProtocolConfig(kind="periodic", period=2),
+                              Xb, Yb)
+        us = (time.perf_counter() - t0) * 1e6 / Tb
+        want = _oracle_cumulative_bytes(pres.sim, pres.participation,
+                                        num_params)
+        exact = bool(np.array_equal(
+            np.asarray(pres.sim.cumulative_bytes, np.int64), want))
+        assert exact
+        rows.append(Row(
+            "population/m1e6", us,
+            f"m={m_big};cohort={int(pres.cohort_sizes.max())};"
+            f"bytes={pres.sim.total_bytes};syncs={pres.sim.num_syncs};"
+            f"bytes_exact={exact}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run())

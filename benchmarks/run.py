@@ -17,8 +17,8 @@ import traceback
 
 from . import (bench_adaptive, bench_async, bench_bounds, bench_comm_time,
                bench_compression, bench_engine, bench_kernels,
-               bench_lm_protocol, bench_rff, bench_roofline, bench_serve,
-               bench_stock, bench_tradeoff)
+               bench_lm_protocol, bench_population, bench_rff,
+               bench_roofline, bench_serve, bench_stock, bench_tradeoff)
 from .common import BenchReport, print_rows
 
 SUITES = {
@@ -35,6 +35,7 @@ SUITES = {
     "lm_protocol": bench_lm_protocol,  # the technique at LM scale (measured)
     "kernels": bench_kernels,          # Pallas hot-spots
     "roofline": bench_roofline,        # §Roofline summary
+    "population": bench_population,    # 10^5-10^6 learners (DESIGN.md 15)
 }
 
 

@@ -177,7 +177,8 @@ def device_ledger_init(capacity: int) -> DeviceLedger:
 
 
 def device_sync_bytes_kernel(
-    bm: ByteModel, stacked_ids: "jnp.ndarray", ledger: DeviceLedger
+    bm: ByteModel, stacked_ids: "jnp.ndarray", ledger: DeviceLedger,
+    mask: "jnp.ndarray | None" = None,
 ) -> "tuple[jnp.ndarray, DeviceLedger]":
     """``sync_bytes_kernel`` under jit: bytes for one kernel-model sync.
 
@@ -191,6 +192,15 @@ def device_sync_bytes_kernel(
 
       upload   |s_i| B_alpha + |s_i \\ K| B_x
       download |U| B_alpha + (|U| - |s_i|) B_x
+
+    ``mask`` (m,) bool restricts the synchronization to a participating
+    cohort (DESIGN.md Sec. 15): non-participating learners neither
+    upload nor download, contribute nothing to the union, and the new
+    coordinator cache ``known`` is the cohort union only — exactly the
+    Sec. 3 formulas evaluated over the sampled learner subset (the
+    host-side oracle is ``sync_bytes_kernel`` over the filtered id
+    lists, pinned by tests/test_population.py).  ``mask=None`` is the
+    full-participation case with ``m`` a static constant, unchanged.
     """
     import jax
     import jax.numpy as jnp
@@ -201,22 +211,31 @@ def device_sync_bytes_kernel(
     # The arithmetic below runs in int32 (x64 is disabled by default).
     # Worst case per sync: every learner ships tau distinct vectors and
     # downloads a full m*tau union — refuse shapes that could wrap.
+    # A mask only shrinks the cohort, so the full-m worst case covers it.
     worst = m * tau * (bm.B_alpha + bm.B_x) * (m + 1)
     if worst >= 2**31:
         raise ValueError(
             f"per-sync bytes can reach {worst} for m={m}, tau={tau}, "
             f"d={bm.dim}, which overflows the device ledger's int32; "
             "use the host CommunicationLedger at this scale")
+    if mask is not None:
+        # a non-participating learner's id row becomes the empty set:
+        # n_i = 0, in_known_i = 0, and it adds nothing to the union
+        stacked_ids = jnp.where(mask[:, None], stacked_ids, -1)
     uniq, n = jax.vmap(rkhs.sorted_unique)(stacked_ids)    # (m, tau), (m,)
     union, u = rkhs.sorted_unique(uniq)                    # (m*tau,), ()
     in_known = jax.vmap(
         lambda q: rkhs.count_members(q, ledger.known))(uniq)  # (m,)
     n_total = jnp.sum(n)
+    downloaders = (jnp.sum(
+        # reprolint: allow[ACC01] int32 cohort count; the worst >= 2**31 guard above covers it
+        mask.astype(jnp.int32)) if mask is not None
+        else m)
     total = (
         n_total * bm.B_alpha
         + jnp.sum(n - in_known) * bm.B_x
-        + m * u * bm.B_alpha
-        + (m * u - n_total) * bm.B_x
+        + downloaders * u * bm.B_alpha
+        + (downloaders * u - n_total) * bm.B_x
     )
     cap = ledger.known.shape[0]
     if union.shape[0] != cap:
@@ -224,6 +243,46 @@ def device_sync_bytes_kernel(
             f"union capacity {union.shape[0]} != ledger capacity {cap}")
     # reprolint: allow[ACC01] int32 is safe here: the worst >= 2**31 guard above rejects overflow
     return total.astype(jnp.int32), DeviceLedger(known=union)
+
+
+def device_rejoin_bytes_kernel(
+    bm: ByteModel, ref_ids: "jnp.ndarray", stacked_ids: "jnp.ndarray",
+    rejoin: "jnp.ndarray",
+) -> "jnp.ndarray":
+    """Sec. 3 download bytes of re-``adopt``-ing rejoining learners
+    (DESIGN.md Sec. 15): a learner that recovers from churn downloads
+    the coordinator's current reference model before its first round
+    back.  Per rejoining learner i with current id set s_i and the
+    reference's distinct id set R, the link is the standard per-message
+    delta encoding (``kernel_payload_bytes`` on the host):
+
+        |R| B_alpha + |R \\ s_i| B_x
+
+    ``ref_ids``: the reference model's sv_id array; ``stacked_ids``:
+    (m, tau) learner ids; ``rejoin``: (m,) bool.  Returns int32 total.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from . import rkhs
+
+    m, tau = stacked_ids.shape
+    # same static worst-case envelope as device_sync_bytes_kernel: at
+    # most m learners each download a full budget of novel vectors
+    worst = m * max(int(ref_ids.reshape(-1).shape[0]), tau) \
+        * (bm.B_alpha + bm.B_x)
+    if worst >= 2**31:
+        raise ValueError(
+            f"per-round rejoin bytes can reach {worst} for m={m}, "
+            "which overflows the int32 byte column; use the host "
+            "accounting at this scale")
+    ref_uniq, ref_n = rkhs.sorted_unique(ref_ids)
+    sorted_rows, _ = jax.vmap(rkhs.sorted_unique)(stacked_ids)
+    overlap = jax.vmap(
+        lambda row: rkhs.count_members(ref_uniq, row))(sorted_rows)  # (m,)
+    per = ref_n * bm.B_alpha + (ref_n - overlap) * bm.B_x
+    # reprolint: allow[ACC01] int32 is safe here: the worst >= 2**31 guard above rejects overflow
+    return jnp.sum(jnp.where(rejoin, per, 0)).astype(jnp.int32)
 
 
 class CommunicationLedger:

@@ -157,8 +157,19 @@ def _allreduce_cost(sub: Substrate, m: int) -> Array:
     return jnp.asarray(cost, jnp.int32)
 
 
+def _tree_select(mask: Array, new, old):
+    """Per-learner select over a stacked state tree: leaf shapes are
+    (m, ...), ``mask`` is (m,) bool — broadcast against the trailing
+    dims.  ``jnp.where`` on identical operands is the identity, so an
+    all-True mask keeps the masked engine bitwise on the unmasked path."""
+    def sel(n, o):
+        return jnp.where(mask.reshape(mask.shape + (1,) * (n.ndim - 1)),
+                         n, o)
+    return jax.tree.map(sel, new, old)
+
+
 def _make_step(sub: Substrate, kind: str, record_divergence: bool,
-               topology: str, axis):
+               topology: str, axis, masked: bool = False):
     """One scan step over (state, reference, ledger).
 
     ``axis=None`` is the single-device engine: ``reference`` is ONE
@@ -176,6 +187,19 @@ def _make_step(sub: Substrate, kind: str, record_divergence: bool,
     sum would make the recorded floats depend on the reduction order
     the compiler picks for that program, which is exactly the
     bit-for-bit leak the parity contract forbids.
+
+    ``masked`` (DESIGN.md Sec. 15) threads a per-round participation
+    mask: ``xs`` gains a (m,) bool row ``p`` and the carry gains the
+    previous round's mask.  Inactive learners keep their state bitwise
+    (no predict/update), report zero loss/err, contribute nothing to
+    the violation check or the sync average, and pay no bytes.
+    Learners with ``p & ~prev`` are RE-JOINING after churn: before
+    their first round back they re-``adopt`` the current reference and
+    the ledger is charged the Sec. 3 download
+    (``Substrate.rejoin_payload_bytes``).  A round with an empty cohort
+    syncs nothing and moves zero bytes.  With an all-True mask every
+    ``jnp.where`` selects the unmasked operand, so this path reproduces
+    the unmasked step bit-for-bit (tests/test_population.py).
     """
     sharded = axis is not None
 
@@ -186,8 +210,49 @@ def _make_step(sub: Substrate, kind: str, record_divergence: bool,
             lambda v: lax.all_gather(v, axis, axis=0, tiled=True), t)
 
     def step(params: ScanParams, carry, xs):
-        state, reference, ledger = carry
-        x, y, t = xs
+        if masked:
+            state, reference, ledger, prev = carry
+            x, y, t, p = xs
+            cohort = jnp.sum(p.astype(jnp.int32))
+            n_rejoin = jnp.sum((p & jnp.logical_not(prev)).astype(jnp.int32))
+            if sharded:
+                cohort = lax.psum(cohort, axis)
+                n_rejoin = lax.psum(n_rejoin, axis)
+                m_total = lax.psum(jnp.asarray(p.shape[0], jnp.int32), axis)
+            else:
+                m_total = p.shape[0]
+            any_active = cohort > 0
+            all_active = cohort == m_total
+            # churn recovery: a rejoining learner (p & ~prev) downloads
+            # the current reference before its first round back.  The
+            # whole phase lives behind a lax.cond so that rejoin-free
+            # rounds — every round of a full-participation run — take
+            # an identity branch: inlining the rejoin selects into the
+            # scan body changes how XLA fuses the predict/update
+            # cluster and drifts full-participation floats by ulps
+            # (the cond compiles branches as separate computations).
+            rejoin = p & jnp.logical_not(prev)
+            ref_one = (jax.tree.map(lambda v: v[0], reference)
+                       if sharded else reference)
+
+            def do_rejoin(models):
+                rjb = sub.rejoin_payload_bytes(models, ref_one, rejoin)
+                if sharded:
+                    rjb = lax.psum(rjb, axis)
+                new = _tree_select(
+                    rejoin, sub.adopt(models, ref_one), models)
+                return new, jnp.asarray(rjb, jnp.int32)
+
+            def no_rejoin(models):
+                return models, jnp.zeros((), jnp.int32)
+
+            models, rejoin_bytes = lax.cond(
+                n_rejoin > 0, do_rejoin, no_rejoin, sub.models_of(state))
+            state = sub.with_models(state, models)
+        else:
+            state, reference, ledger = carry
+            x, y, t = xs
+        pre_state = state
 
         if sub.fused_scan_round:
             # one fused round: predict + update share their featurize/
@@ -198,14 +263,31 @@ def _make_step(sub: Substrate, kind: str, record_divergence: bool,
             yhat = sub.predict(sub.models_of(state), x)
             state, losses = sub.update(state, (x, y))
         err = _err_terms(sub.loss, yhat, y)         # per-learner
+        if masked:
+            # inactive learners: no round happened — state stays as the
+            # (possibly rejoin-adopted) pre-round state, observables
+            # zero.  Same cond discipline as the rejoin phase: a
+            # full-cohort round takes the identity branch, keeping the
+            # masking selects out of the round's HLO cluster.
+            def apply_mask(args):
+                state, losses, err = args
+                return (_tree_select(p, state, pre_state),
+                        jnp.where(p, losses, 0.0),
+                        jnp.where(p, err, 0.0))
+
+            state, losses, err = lax.cond(
+                all_active, lambda args: args, apply_mask,
+                (state, losses, err))
         models = sub.models_of(state)
 
         if kind == "none":
             do_sync = jnp.zeros((), bool)
         elif kind == "continuous":
-            do_sync = jnp.ones((), bool)
+            do_sync = any_active if masked else jnp.ones((), bool)
         elif kind == "periodic":
             do_sync = ((t + 1) % params.period) == 0
+            if masked:
+                do_sync = do_sync & any_active
         else:  # dynamic: check local conditions every mini_batch rounds
             check_now = ((t + 1) % params.mini_batch) == 0
 
@@ -214,7 +296,12 @@ def _make_step(sub: Substrate, kind: str, record_divergence: bool,
                     dists = sub.dist_to_ref_each(models, reference)
                 else:
                     dists = sub.dist_to_ref(models, reference)
-                return jnp.any(dists > params.delta)
+                violations = dists > params.delta
+                if masked:
+                    # only the participating cohort is polled; stale
+                    # detached models cannot trigger a sync
+                    violations = p & violations
+                return jnp.any(violations)
 
             if sub.guarded_dist_check:
                 # the distance costs a Gram — only pay it on check
@@ -239,13 +326,30 @@ def _make_step(sub: Substrate, kind: str, record_divergence: bool,
             def sync_branch(args):
                 models, reference, ledger = args
                 full = gather_tree(models)
-                fsync, eps = sub.average_stacked(full)
-                if topology == "coordinator":
-                    nbytes, new_ledger = sub.sync_payload(full, ledger)
+                if masked:
+                    full_mask = gather_tree(p)
+                    fsync, eps = sub.average_stacked_masked(full, full_mask)
+                    if topology == "coordinator":
+                        nbytes, new_ledger = sub.sync_payload_masked(
+                            full, full_mask, ledger)
+                    else:
+                        # static full-m guard, traced cohort-sized cost
+                        _allreduce_cost(
+                            sub, jax.tree.leaves(full)[0].shape[0])
+                        nbytes = sub.allreduce_sync_bytes_masked(cohort)
+                        new_ledger = ledger
+                    # only the cohort adopts; detached learners stay on
+                    # their stale model until they rejoin
+                    new_models = _tree_select(
+                        p, sub.adopt(models, fsync), models)
                 else:
-                    m = jax.tree.leaves(full)[0].shape[0]
-                    nbytes, new_ledger = _allreduce_cost(sub, m), ledger
-                new_models = sub.adopt(models, fsync)
+                    fsync, eps = sub.average_stacked(full)
+                    if topology == "coordinator":
+                        nbytes, new_ledger = sub.sync_payload(full, ledger)
+                    else:
+                        m = jax.tree.leaves(full)[0].shape[0]
+                        nbytes, new_ledger = _allreduce_cost(sub, m), ledger
+                    new_models = sub.adopt(models, fsync)
                 if sharded:
                     m_local = jax.tree.leaves(models)[0].shape[0]
                     new_ref = _stack_ref(fsync, m_local)
@@ -270,6 +374,10 @@ def _make_step(sub: Substrate, kind: str, record_divergence: bool,
             div = sub.divergence(gather_tree(sub.models_of(state)))
         else:
             div = jnp.zeros((), jnp.float32)
+        if masked:
+            nbytes = nbytes + rejoin_bytes
+            out = (losses, err, nbytes, div, do_sync, eps)
+            return (state, new_ref, new_ledger, p), out
         out = (losses, err, nbytes, div, do_sync, eps)
         return (state, new_ref, new_ledger), out
 
@@ -345,8 +453,23 @@ def assemble_sim_result(sub: Substrate, record_divergence: bool,
 
 
 def _scan_core(sub: Substrate, kind: str, record_divergence: bool,
-               topology: str = "coordinator"):
-    step = _make_step(sub, kind, record_divergence, topology, axis=None)
+               topology: str = "coordinator", masked: bool = False):
+    step = _make_step(sub, kind, record_divergence, topology, axis=None,
+                      masked=masked)
+
+    if masked:
+        def simulate(params: ScanParams, X: Array, Y: Array, part: Array):
+            T, m, d = X.shape
+            state0, ref0, ledger0 = init_protocol_carry(sub, m)
+            # prev-mask carry starts as round 0's mask: nobody is
+            # "rejoining" into the freshly distributed blank reference
+            carry0 = (state0, ref0, ledger0, part[0])
+            ts = jnp.arange(T, dtype=jnp.int32)
+            _, outs = lax.scan(functools.partial(step, params),
+                               carry0, (X, Y, ts, part))
+            return outs
+
+        return simulate
 
     def simulate(params: ScanParams, X: Array, Y: Array):
         T, m, d = X.shape
@@ -385,7 +508,8 @@ def _num_shards(mesh: Mesh, axes: Tuple[str, ...]) -> int:
 
 def _sharded_core(sub: Substrate, kind: str, record_divergence: bool,
                   topology: str, mesh: Mesh, axes: Tuple[str, ...],
-                  vmapped: bool, data_batched: bool):
+                  vmapped: bool, data_batched: bool,
+                  masked: bool = False):
     """The scan core under ``shard_map``: learner axis sharded over
     ``axes``, config axis (when ``vmapped``) vmapped INSIDE the shard
     so one mesh program serves the whole grid.
@@ -399,14 +523,29 @@ def _sharded_core(sub: Substrate, kind: str, record_divergence: bool,
     like the streams; bytes / divergence / sync flags / eps are
     replicated per-round scalars.
     """
-    step = _make_step(sub, kind, record_divergence, topology, axis=axes)
+    if masked and vmapped:
+        raise NotImplementedError(
+            "participation masks are per-run (engine.run); sweep grids "
+            "do not take a participation= argument")
+    step = _make_step(sub, kind, record_divergence, topology, axis=axes,
+                      masked=masked)
 
-    def local_run(params: ScanParams, state0, ref0, ledger0, X, Y):
-        T = X.shape[0]
-        ts = jnp.arange(T, dtype=jnp.int32)
-        _, outs = lax.scan(functools.partial(step, params),
-                           (state0, ref0, ledger0), (X, Y, ts))
-        return outs
+    if masked:
+        def local_run(params: ScanParams, state0, ref0, ledger0, X, Y,
+                      part):
+            T = X.shape[0]
+            ts = jnp.arange(T, dtype=jnp.int32)
+            _, outs = lax.scan(functools.partial(step, params),
+                               (state0, ref0, ledger0, part[0]),
+                               (X, Y, ts, part))
+            return outs
+    else:
+        def local_run(params: ScanParams, state0, ref0, ledger0, X, Y):
+            T = X.shape[0]
+            ts = jnp.arange(T, dtype=jnp.int32)
+            _, outs = lax.scan(functools.partial(step, params),
+                               (state0, ref0, ledger0), (X, Y, ts))
+            return outs
 
     body = local_run
     if vmapped:
@@ -422,12 +561,26 @@ def _sharded_core(sub: Substrate, kind: str, record_divergence: bool,
     # bytes / divergence / flags / eps are replicated per-round scalars
     series_spec = P(None, None, lead) if vmapped else P(None, lead)
     scalar_spec = P()
+    in_specs = (P(), P(lead), P(lead), P(), data_spec, data_spec)
+    if masked:
+        in_specs = in_specs + (P(None, lead),)   # participation (T, m)
     smapped = shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P(lead), P(lead), P(), data_spec, data_spec),
+        in_specs=in_specs,
         out_specs=(series_spec, series_spec, scalar_spec, scalar_spec,
                    scalar_spec, scalar_spec),
         check_rep=False)
+
+    if masked:
+        def simulate(params: ScanParams, X: Array, Y: Array, part: Array):
+            m = X.shape[1]
+            state0 = sub.init(m)
+            ref0, _ = sub.average_stacked(sub.models_of(state0))
+            ledger0 = sub.ledger_init(m)
+            return smapped(params, state0, _stack_ref(ref0, m), ledger0,
+                           X, Y, part)
+
+        return simulate
 
     def simulate(params: ScanParams, X: Array, Y: Array):
         m = X.shape[2] if (vmapped and data_batched) else X.shape[1]
@@ -449,7 +602,8 @@ def _jitted(sub: Substrate, kind: str, record_divergence: bool,
             vmapped: bool, data_batched: bool,
             topology: str = "coordinator",
             mesh: Optional[Mesh] = None,
-            axes: Optional[Tuple[str, ...]] = None):
+            axes: Optional[Tuple[str, ...]] = None,
+            masked: bool = False):
     """One jitted (optionally vmapped / mesh-sharded) simulate fn per
     static config.
 
@@ -462,8 +616,8 @@ def _jitted(sub: Substrate, kind: str, record_divergence: bool,
     if mesh is not None:
         return jax.jit(_sharded_core(
             sub, kind, record_divergence, topology, mesh, axes,
-            vmapped, data_batched))
-    core = _scan_core(sub, kind, record_divergence, topology)
+            vmapped, data_batched, masked))
+    core = _scan_core(sub, kind, record_divergence, topology, masked)
     if vmapped:
         dax = 0 if data_batched else None
         core = jax.vmap(core, in_axes=(ScanParams(0, 0, 0), dax, dax))
@@ -499,6 +653,7 @@ def run(
     backend: Optional[str] = None,           # None -> substrate's own
     mesh: Optional[Mesh] = None,
     topology: str = "coordinator",
+    participation: Optional[np.ndarray] = None,   # (T, m) bool
 ) -> SimResult:
     """Run T rounds of m learners under pcfg, fully on device.
 
@@ -522,6 +677,15 @@ def run(
     ``topology``: "coordinator" charges the paper's Sec. 3 bytes,
     "allreduce" the mesh collective's ring total (DESIGN.md Sec. 9);
     decisions and models are identical either way.
+
+    ``participation``: a (T, m) bool mask selecting the per-round
+    cohort (DESIGN.md Sec. 15).  Inactive learners skip predict/update,
+    contribute nothing to the violation check or the sync average, and
+    pay no Sec. 3 bytes; a learner whose mask flips False→True is
+    re-joining after churn and re-``adopt``s the current reference,
+    paying the download.  ``participation=None`` (default) and an
+    all-True mask both produce the exact unmasked result — losses
+    bitwise, bytes integer-exact (tests/test_population.py).
     """
     sub = substrate_mod.substrate_of(
         learner, sync_budget=sync_budget, compress_method=compress_method,
@@ -531,9 +695,19 @@ def run(
     T, m, d = X.shape
     sub.validate(T, m, d)
     axes = _resolve_mesh(mesh, topology, m)
+    masked = participation is not None
+    if masked:
+        part = np.asarray(participation)
+        if part.shape != (T, m):
+            raise ValueError(
+                f"participation shape {part.shape} != (T, m) = {(T, m)}")
+        part = jnp.asarray(part.astype(bool))
     fn = _jitted(sub, pcfg.kind, bool(record_divergence), False, False,
-                 topology, mesh, axes)
-    outs = fn(_params_of(pcfg), jnp.asarray(X), jnp.asarray(Y))
+                 topology, mesh, axes, masked)
+    if masked:
+        outs = fn(_params_of(pcfg), jnp.asarray(X), jnp.asarray(Y), part)
+    else:
+        outs = fn(_params_of(pcfg), jnp.asarray(X), jnp.asarray(Y))
     loss, err, nbytes, div, flags, eps = (np.asarray(o) for o in outs)
     return assemble_sim_result(sub, bool(record_divergence),
                                loss, err, nbytes, div, flags, eps)

@@ -165,6 +165,43 @@ class Substrate:
         (eps = 0) for primal substrates."""
         raise NotImplementedError
 
+    # -- participation face (DESIGN.md Sec. 15) -----------------------------
+    #
+    # The population layer synchronizes a sampled cohort: the Prop. 2
+    # average, the Sec. 3 payload, and the ring pricing all restrict to
+    # the participating learners, and a learner rejoining after churn
+    # re-adopts the reference at a Sec. 3 download price.  Contract:
+    # with ``mask`` all-True every masked op returns the SAME floats /
+    # integers as its unmasked twin (tests/test_population.py pins it
+    # bitwise) — that degenerate case is what makes the population
+    # engine path provable against ``engine.run``.
+
+    def average_stacked_masked(self, models, mask):
+        """(f_sync, eps) over the participating cohort only: the
+        Prop. 2 average of the masked learners.  ``mask`` (m,) bool;
+        an empty cohort must not divide by zero (the engine never
+        syncs one, but ``lax.cond`` lowers to a select under some
+        transforms, so the untaken branch still executes)."""
+        raise NotImplementedError
+
+    def sync_payload_masked(self, models, mask, ledger):
+        """Sec. 3 bytes of one cohort synchronization
+        -> (int32 bytes, ledger): non-participants neither upload nor
+        download and are excluded from the shipped union."""
+        raise NotImplementedError
+
+    def rejoin_payload_bytes(self, models, ref, rejoin):
+        """int32 Sec. 3 download bytes of re-``adopt``-ing the
+        reference on the ``rejoin`` (m,) bool learners — the recovery
+        half of churn (DESIGN.md Sec. 15)."""
+        raise NotImplementedError
+
+    def allreduce_sync_bytes_masked(self, count):
+        """Traced-int32 ring bytes of one cohort synchronization under
+        ``topology="allreduce"`` — ``allreduce_sync_bytes`` with the
+        static m replaced by the traced cohort size ``count``."""
+        raise NotImplementedError
+
     def adopt(self, models, fsync):
         raise NotImplementedError
 
@@ -396,6 +433,48 @@ class SVSubstrate(Substrate):
         return compression.compress(self.lcfg.kernel, fbar,
                                     self.sync_budget, self.compress_method)
 
+    def average_stacked_masked(self, models: SVModel, mask):
+        # the Prop. 2 average over the cohort: non-participants' slots
+        # enter with alpha = 0 / id = -1 (inactive), and the divisor is
+        # the cohort size.  With mask all-True this is exactly
+        # rkhs.average_stacked — same slot multiset, same order, same
+        # float32 division by m — so the compressed result is bitwise
+        # identical to average_stacked's (tests/test_population.py).
+        m, tau, d = models.sv.shape
+        cnt = jnp.sum(mask.astype(jnp.int32))
+        # XLA lowers division by the COMPILE-TIME constant m differently
+        # from division by a traced scalar (strength reduction), so the
+        # full-cohort branch must literally be ``alpha / m`` for the
+        # bitwise contract to hold; the where picks it when cnt == m.
+        cnt_f = jnp.maximum(cnt, 1).astype(jnp.float32)
+        scaled = jnp.where(cnt == m, models.alpha / m, models.alpha / cnt_f)
+        alpha = jnp.where(mask[:, None] & (models.sv_id >= 0), scaled, 0.0)
+        sv_id = jnp.where(mask[:, None], models.sv_id, -1)
+        fbar = SVModel(sv=models.sv.reshape(m * tau, d),
+                       alpha=alpha.reshape(m * tau),
+                       sv_id=sv_id.reshape(m * tau))
+        return compression.compress(self.lcfg.kernel, fbar,
+                                    self.sync_budget, self.compress_method)
+
+    def sync_payload_masked(self, models: SVModel, mask, ledger):
+        bm = accounting.ByteModel(dim=self.lcfg.dim)
+        return accounting.device_sync_bytes_kernel(
+            bm, models.sv_id, ledger, mask=mask)
+
+    def rejoin_payload_bytes(self, models: SVModel, ref: SVModel, rejoin):
+        bm = accounting.ByteModel(dim=self.lcfg.dim)
+        return accounting.device_rejoin_bytes_kernel(
+            bm, ref.sv_id, models.sv_id, rejoin)
+
+    def allreduce_sync_bytes_masked(self, count):
+        bm = accounting.ByteModel(dim=self.lcfg.dim)
+        slot = bm.B_x + bm.dtype_bytes
+        # allgather_bytes with traced cohort size: c (c-1) shard_bytes
+        # reprolint: allow[ACC01] int32 mirrors allgather_bytes; engine guards the worst case at full m
+        return (count * jnp.maximum(count - 1, 0)
+                # reprolint: allow[ACC01] int32 mirrors allgather_bytes; engine guards the worst case at full m
+                * jnp.asarray(self.lcfg.budget * slot, jnp.int32))
+
     def adopt(self, models: SVModel, fsync: SVModel) -> SVModel:
         one = rkhs.pad_to_budget(fsync, self.lcfg.budget)
         return SVModel(
@@ -608,6 +687,51 @@ class _PrimalSubstrate(Substrate):
     def allreduce_sync_bytes(self, m: int) -> int:
         # fixed-size primal vectors reduce-scatter + all-gather
         return accounting.allreduce_bytes(self.num_params, m)
+
+    # -- participation face (DESIGN.md Sec. 15) -----------------------------
+
+    def average_stacked_masked(self, models, mask):
+        # masked Prop. 2 mean: sum the cohort's weights in stacked
+        # order, divide by the cohort size.  With mask all-True this is
+        # sum/m in the same reduction order as jnp.mean — bitwise
+        # identical to average_stacked (tests/test_population.py).
+        cls = self._state_cls()
+        m = models.w.shape[0]
+        cnt = jnp.sum(mask.astype(jnp.int32))
+        # division by the compile-time constant m is strength-reduced
+        # by XLA; division by a traced scalar is not — the full-cohort
+        # branch must literally divide by m for bitwise parity with
+        # jnp.mean in average_stacked (see SVSubstrate's masked twin)
+        cnt_f = jnp.maximum(cnt, 1).astype(jnp.float32)
+        sum_w = jnp.sum(jnp.where(mask[:, None], models.w, 0.0), axis=0)
+        sum_b = jnp.sum(jnp.where(mask, models.b, 0.0))
+        w = jnp.where(cnt == m, jnp.mean(models.w, axis=0), sum_w / cnt_f)
+        b = jnp.where(cnt == m, jnp.mean(models.b), sum_b / cnt_f)
+        return cls(w=w, b=b), jnp.zeros((), jnp.float32)
+
+    def sync_payload_masked(self, models, mask, ledger):
+        # sync_bytes_linear with the traced cohort size: 2 c |theta| B
+        count = jnp.sum(mask.astype(jnp.int32))
+        # reprolint: allow[ACC01] int32 mirrors sync_bytes_linear; bounded by the full-m value
+        return (count * jnp.asarray(2 * self.num_params * 4, jnp.int32),
+                ledger)
+
+    def rejoin_payload_bytes(self, models, ref, rejoin):
+        # dense vectors have no identity structure: a rejoin is one
+        # full download per recovering learner (linear_payload_bytes)
+        # reprolint: allow[ACC01] int32 rejoin count; bounded by m
+        count = jnp.sum(rejoin.astype(jnp.int32))
+        # reprolint: allow[ACC01] int32 mirrors linear_payload_bytes; bounded by m |theta| B
+        return count * jnp.asarray(
+            # reprolint: allow[ACC01] int32 mirrors linear_payload_bytes; bounded by m |theta| B
+            accounting.linear_payload_bytes(self.num_params), jnp.int32)
+
+    def allreduce_sync_bytes_masked(self, count):
+        # allreduce_bytes with traced cohort size: 2 (c-1) |theta| B
+        # reprolint: allow[ACC01] int32 mirrors allreduce_bytes; bounded by the full-m value
+        return (2 * jnp.maximum(count - 1, 0)
+                # reprolint: allow[ACC01] int32 mirrors allreduce_bytes; bounded by the full-m value
+                * jnp.asarray(self.num_params * 4, jnp.int32))
 
     def dist_one(self, model, ref) -> Array:
         return jnp.sum((model.w - ref.w) ** 2) + (model.b - ref.b) ** 2

@@ -1,0 +1,126 @@
+"""Population simulation driver (DESIGN.md Sec. 15).
+
+``run_population`` drives the masked scan engine over a
+:class:`~repro.population.availability.PopulationSpec`: the population
+is the engine's stacked learner axis (vmapped cohorts; shard it over a
+mesh with ``mesh=`` exactly as ``engine.run`` documents), the per-round
+cohort is the seeded participation mask, and the result couples the
+engine's :class:`~repro.core.simulation.SimResult` — losses bitwise,
+Sec. 3 bytes integer-exact over only the participating cohort — with
+the population-level observables (cohort sizes, rejoin counts, class
+assignment).
+
+Scale: a 10^5-learner population on 8 forced host devices is the CI
+quick-sweep (benchmarks/bench_population.py); 10^6 works with short
+streams and primal substrates.  The SV substrate's device ledger
+refuses populations whose worst-case sync bytes overflow int32
+(``accounting.device_sync_bytes_kernel``), so population-scale runs use
+RFF / linear — the paper's own Sec. 4 proposal for communication at
+scale — where per-sync bytes are the fixed ``2 c |theta| B`` of the
+cohort.
+
+Determinism: masks come from ``availability.participation_masks``
+(integer-tagged SeedSequences), the engine is the deterministic scan
+core, and the trace emitted by :func:`trace_population` is
+byte-identical across runs and ``PYTHONHASHSEED`` values
+(tests/test_population.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core import engine
+from ..core.protocol import ProtocolConfig
+from ..core.simulation import SimResult
+from ..telemetry.trace import PID_RUNTIME, Tracer
+from .availability import PopulationSpec, participation_masks, \
+    class_assignment, rejoin_counts
+
+
+@dataclasses.dataclass
+class PopulationResult:
+    """A population run: the engine result plus cohort observables."""
+
+    sim: SimResult
+    participation: np.ndarray    # (T, m) bool, the mask that ran
+    cohort_sizes: np.ndarray     # (T,) int64 participants per round
+    rejoins: np.ndarray          # (T,) int64 rejoin events per round
+    class_ids: np.ndarray        # (m,) int class index per learner
+
+    @property
+    def mean_cohort(self) -> float:
+        return float(self.cohort_sizes.mean())
+
+    @property
+    def total_rejoins(self) -> int:
+        return int(self.rejoins.sum())
+
+
+def run_population(
+    spec: PopulationSpec,
+    learner,
+    pcfg: ProtocolConfig,
+    X: np.ndarray,          # (T, m_total, d)
+    Y: np.ndarray,          # (T, m_total)
+    *,
+    mesh=None,
+    topology: str = "coordinator",
+    record_divergence: bool = False,
+    participation: Optional[np.ndarray] = None,
+) -> PopulationResult:
+    """Run the population over a labeled stream.
+
+    ``X`` / ``Y`` carry the full population's stream (the engine's
+    shapes); learners outside the round's cohort never touch their
+    row.  ``participation`` overrides the spec-derived mask (same
+    (T, m) shape) — the degenerate all-True override reproduces
+    ``engine.run`` bit-for-bit, which is the contract the whole layer
+    is proven against.
+    """
+    T, m, _ = np.asarray(X).shape if not hasattr(X, "shape") else X.shape
+    if m != spec.m_total:
+        raise ValueError(
+            f"stream learner axis {m} != spec.m_total {spec.m_total}")
+    if participation is None:
+        mask = participation_masks(spec, T)
+    else:
+        mask = np.asarray(participation, bool)
+        if mask.shape != (T, m):
+            raise ValueError(
+                f"participation shape {mask.shape} != {(T, m)}")
+    sim = engine.run(
+        learner, pcfg, X, Y,
+        mesh=mesh, topology=topology,
+        record_divergence=record_divergence,
+        participation=mask)
+    return PopulationResult(
+        sim=sim,
+        participation=mask,
+        cohort_sizes=mask.sum(axis=1).astype(np.int64),
+        rejoins=rejoin_counts(mask),
+        class_ids=class_assignment(spec),
+    )
+
+
+def trace_population(result: PopulationResult, tracer: Tracer, *,
+                     name: str = "population") -> None:
+    """Write the population observables into a Chrome trace: cohort
+    size and cumulative rejoins as counter tracks on round-index time,
+    plus an instant per sync round carrying the round's cohort.  All
+    values are ints from deterministic arrays, so the emitted trace is
+    byte-identical for byte-identical results."""
+    cum_rejoins = 0
+    sync_set = {int(t) for t in np.asarray(result.sim.sync_rounds)}
+    for t in range(len(result.cohort_sizes)):
+        cum_rejoins += int(result.rejoins[t])
+        tracer.counter(f"{name}/cohort", float(t),
+                       {"participants": int(result.cohort_sizes[t]),
+                        "rejoins": cum_rejoins},
+                       pid=PID_RUNTIME)
+        if t in sync_set:
+            tracer.instant(f"{name}/sync", float(t), pid=PID_RUNTIME,
+                           args={"round": t,
+                                 "cohort": int(result.cohort_sizes[t])})

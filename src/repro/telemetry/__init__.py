@@ -14,16 +14,16 @@ Everything here is host-side and opt-in: no tracer, no cost — the
 jitted scan core is never touched (no traced values enter the carry).
 """
 from . import monitor, probe, trace
-from .monitor import (CriterionMonitor, MonitorSeries, monitor_result,
-                      monitor_sweep, unit_bytes_of)
+from .monitor import (CriterionMonitor, MonitorSeries, monitor_population,
+                      monitor_result, monitor_sweep, unit_bytes_of)
 from .probe import CompileCounter, TimedStats, time_fn, wallclock
 from .trace import (PID_MONITOR, PID_NETWORK, PID_RUNTIME, PID_SERVING,
                     TICKS_PER_UNIT, Tracer)
 
 __all__ = [
     "monitor", "probe", "trace",
-    "CriterionMonitor", "MonitorSeries", "monitor_result",
-    "monitor_sweep", "unit_bytes_of",
+    "CriterionMonitor", "MonitorSeries", "monitor_population",
+    "monitor_result", "monitor_sweep", "unit_bytes_of",
     "CompileCounter", "TimedStats", "time_fn", "wallclock",
     "PID_MONITOR", "PID_NETWORK", "PID_RUNTIME", "PID_SERVING",
     "TICKS_PER_UNIT", "Tracer",

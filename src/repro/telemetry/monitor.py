@@ -237,3 +237,26 @@ def monitor_sweep(sweep_result, learner, m: int, *,
     return [monitor_result(sweep_result[i], learner, m,
                            topology=topology, **kw)
             for i in range(len(sweep_result))]
+
+
+def monitor_population(pres, learner, *,
+                       topology: str = "coordinator",
+                       **kw) -> CriterionMonitor:
+    """Def. 1 monitor over a population run (DESIGN.md Sec. 15).
+
+    ``pres`` is a ``population.sim.PopulationResult``.  Under partial
+    participation only the sampled cohort communicates, so the bound is
+    priced at the LARGEST cohort the run ever synchronized — ``m`` and
+    ``unit_bytes`` both evaluate at ``max_t |cohort_t|``, not at
+    ``m_total`` — and the byte series fed to the monitor is the device
+    ledger's cohort-only column, integer-exact (the engine charges
+    nothing for detached learners; tests/test_population.py pins the
+    column against the set-algebra oracle).  An idle population (every
+    round empty) monitors trivially at cohort 1.
+    """
+    m_eff = max(1, int(np.max(pres.cohort_sizes)))
+    # a 1-learner allreduce ring moves 0 bytes; the monitor needs a
+    # positive unit, and such a run cannot communicate anyway
+    unit = max(1, unit_bytes_of(learner, m_eff, topology))
+    mon = CriterionMonitor(m_eff, unit, **kw)
+    return mon.observe_result(pres.sim)

@@ -230,6 +230,45 @@ def test_acc01_positive_int32_in_bytes_function():
     assert "ACC01" in rules_of(lint(src))
 
 
+def test_acc01_positive_float_astype_on_bytes():
+    # the population-layer temptation: cohort-mask the byte column by
+    # casting it float before a reduction (DESIGN.md Sec. 15)
+    src = """
+    import jax.numpy as jnp
+    def cohort_cost(round_bytes, mask):
+        return jnp.sum(jnp.where(mask, round_bytes.astype(jnp.float32), 0))
+    """
+    assert "ACC01" in rules_of(lint(src))
+
+
+def test_acc01_positive_mean_over_bytes():
+    src = """
+    import jax.numpy as jnp
+    def per_learner(cum_bytes):
+        return jnp.mean(cum_bytes)
+    """
+    assert "ACC01" in rules_of(lint(src))
+
+
+def test_acc01_positive_bytes_mean_method():
+    src = "def report(res):\n    return res.cumulative_bytes.mean()\n"
+    assert "ACC01" in rules_of(lint(src))
+
+
+def test_acc01_negative_masked_integer_cohort_bytes():
+    # the correct population shape: integer where-select, integer sum,
+    # int64 widening — nothing to flag
+    src = """
+    import jax.numpy as jnp
+    def cohort_cost(round_bytes, mask):
+        kept = jnp.where(mask, round_bytes, 0)
+        return jnp.sum(kept).astype(jnp.int64)
+    def mean_loss(losses, mask):
+        return jnp.mean(jnp.where(mask, losses, 0.0))
+    """
+    assert "ACC01" not in rules_of(lint(src))
+
+
 def test_acc01_negative_integer_exact():
     src = """
     def check(total_bytes, bound):

@@ -15,6 +15,13 @@ floats.  This rule flags:
 * assignments to a ``*bytes*`` name whose value contains a float
   literal or a true division (use ``//`` on the ledger);
 * ``float(...)`` applied to a ``*bytes*`` expression;
+* ``.astype(<float dtype>)`` applied to a ``*bytes*`` expression —
+  the population layer's cohort masks made ``round_bytes.astype
+  (jnp.float32)`` a tempting reduction input (DESIGN.md Sec. 15);
+* ``mean`` / ``average`` over a ``*bytes*`` expression — averaging
+  the ledger over a cohort produces fractional bytes; cohort
+  accounting sums integers (divide only on a host report path,
+  explicitly allowed);
 * ``int32`` dtypes referenced inside functions whose name contains
   ``bytes`` (the PR 4 overflow shape) — guarded sites carry an
   inline allow.
@@ -33,6 +40,22 @@ from . import Rule
 BYTES_NAME = re.compile(r"(^|_)bytes($|_)|bytes$", re.IGNORECASE)
 INT32_NAMES = frozenset({"jnp.int32", "np.int32", "numpy.int32",
                          "jax.numpy.int32"})
+FLOAT_DTYPE_NAMES = frozenset(
+    f"{mod}.{dt}" for mod in ("jnp", "np", "numpy", "jax.numpy")
+    for dt in ("float16", "float32", "float64", "bfloat16"))
+FLOAT_DTYPE_STRINGS = frozenset(
+    {"float16", "float32", "float64", "bfloat16"})
+MEAN_FUNCS = frozenset(
+    f"{mod}.{fn}" for mod in ("jnp", "np", "numpy", "jax.numpy")
+    for fn in ("mean", "average", "nanmean"))
+
+
+def _is_float_dtype(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value in FLOAT_DTYPE_STRINGS
+    if isinstance(node, ast.Name):
+        return node.id == "float"
+    return dotted_name(node) in FLOAT_DTYPE_NAMES
 
 
 def mentions_bytes(node: ast.AST) -> bool:
@@ -108,6 +131,26 @@ class Acc01(Rule):
                         "`float()` on a byte-ledger value loses "
                         "integer-exactness above 2**53; keep bytes "
                         "integral (DESIGN.md Sec. 7)"))
+                elif (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "astype"
+                        and mentions_bytes(node.func.value)
+                        and node.args and _is_float_dtype(node.args[0])):
+                    out.append(ctx.finding(
+                        self.id, node,
+                        "float `.astype` on a byte-ledger value; cohort "
+                        "byte paths stay integral end to end "
+                        "(DESIGN.md Sec. 15)"))
+                elif ((fname in MEAN_FUNCS
+                        and node.args and mentions_bytes(node.args[0]))
+                      or (isinstance(node.func, ast.Attribute)
+                          and node.func.attr == "mean"
+                          and mentions_bytes(node.func.value))):
+                    out.append(ctx.finding(
+                        self.id, node,
+                        "averaging a byte-ledger value produces "
+                        "fractional bytes; cohort accounting sums "
+                        "integers — divide only on an explicitly "
+                        "allowed host report path (DESIGN.md Sec. 15)"))
 
         # int32 accumulation inside *bytes* functions (PR 4 overflow)
         for node in ast.walk(ctx.tree):
